@@ -1,0 +1,125 @@
+"""Perf-iteration driver: lower ONE (arch x shape) combo with experiment
+knobs and report the roofline deltas vs the frozen baseline
+(results/dryrun_single.jsonl).
+
+    PYTHONPATH=src python benchmarks/hillclimb.py --arch jamba-1.5-large-398b \
+        --shape train_4k --microbatches 16 --moment-dtype bfloat16 --tag mb16
+
+Each invocation appends a record to results/hillclimb.jsonl so the
+§Perf log in EXPERIMENTS.md is reproducible.
+"""
+import argparse
+import json
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time                                                     # noqa: E402
+
+import jax                                                      # noqa: E402
+
+from repro.configs import SHAPES_BY_NAME, get_config            # noqa: E402
+from repro.launch import inputs as inputs_lib                   # noqa: E402
+from repro.launch.dryrun import run_combo                       # noqa: E402
+from repro.launch.flops import roofline_terms, step_flops, step_hbm_bytes  # noqa: E402
+from repro.launch.hloparse import collective_bytes, tpu_faithful_total  # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.models.transformer import block_period               # noqa: E402
+from repro.sharding import specs as specs_lib                   # noqa: E402
+from repro.sharding.axes import axes_from_mesh                  # noqa: E402
+from repro.train.loop import (TrainConfig, make_prefill,        # noqa: E402
+                              make_serve_step, make_train_step)
+from repro.train.optimizer import OptConfig                     # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--kv-dtype", default="")
+    ap.add_argument("--q-chunk", type=int, default=1024)
+    ap.add_argument("--window", type=int, default=-1,
+                    help="override sliding window (-1: arch default)")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES_BY_NAME[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    axes = axes_from_mesh(mesh)
+    fsdp = (not args.no_fsdp) and specs_lib.auto_fsdp(cfg, mesh, axes)
+
+    if args.window >= 0:
+        cfg = cfg.replace(sliding_window=args.window)
+    elif shape.name == "long_500k" and not cfg.sliding_window:
+        if any(k == "attn" for k, _ in cfg.layer_pattern()):
+            cfg = cfg.replace(sliding_window=8192)
+    if args.kv_dtype:
+        cfg = cfg.replace(kv_dtype=args.kv_dtype)
+
+    tc = TrainConfig(opt=OptConfig(moment_dtype=args.moment_dtype),
+                     q_chunk=args.q_chunk, microbatches=args.microbatches,
+                     zero1=args.zero1)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            step, *_ = make_train_step(cfg, mesh, tc, shape, fsdp=fsdp)
+            state = inputs_lib.state_struct(cfg, mesh, fsdp, tc)
+            batch = inputs_lib.batch_struct(cfg, shape, mesh)
+            lowered = step.lower(state, batch)
+        elif shape.kind == "prefill":
+            pf, *_ = make_prefill(cfg, mesh, shape, q_chunk=args.q_chunk,
+                                  fsdp=fsdp)
+            lowered = pf.lower(inputs_lib.params_struct(cfg, mesh, fsdp),
+                               inputs_lib.batch_struct(cfg, shape, mesh))
+        else:
+            st, *_ = make_serve_step(cfg, mesh, shape, fsdp=fsdp)
+            token, cache, pos = inputs_lib.decode_structs(cfg, shape, mesh)
+            lowered = st.lower(inputs_lib.params_struct(cfg, mesh, fsdp),
+                               token, cache, pos)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    coll, counts = collective_bytes(compiled.as_text())
+    fl = step_flops(cfg, shape)
+    hb = step_hbm_bytes(cfg, shape, mesh, axes, fsdp)
+    # moment dtype affects state traffic (step_hbm_bytes assumes 8B moments)
+    if args.moment_dtype == "bfloat16" and shape.kind == "train":
+        hb["moments"] = hb.get("moments", 0.0) / 2
+        hb["total"] = hb["params"] * 4 + hb["moments"] * 2 + \
+            hb["params"] * 2 * 2 + hb["act_carries"] * 3
+    coll_dev = tpu_faithful_total(coll)
+    rt = roofline_terms(fl["total"], hb["total"], coll_dev, mesh.devices.size)
+    rec = {
+        "tag": args.tag, "arch": args.arch, "shape": args.shape,
+        "mesh": "2x16x16" if args.multi_pod else "16x16",
+        "knobs": {"microbatches": args.microbatches, "zero1": args.zero1,
+                  "moment_dtype": args.moment_dtype,
+                  "kv_dtype": args.kv_dtype, "q_chunk": args.q_chunk,
+                  "window": args.window, "fsdp": fsdp},
+        "t_compile_s": round(time.time() - t0, 1),
+        "temp_bytes_per_dev": getattr(mem, "temp_size_in_bytes", 0),
+        "argument_bytes_per_dev": getattr(mem, "argument_size_in_bytes", 0),
+        "collective_bytes": coll, "collective_counts": counts,
+        "collective_bytes_dev": coll_dev,
+        "analytic_flops_global": fl["total"],
+        "analytic_hbm_bytes_dev": hb["total"],
+        "roofline": rt,
+    }
+    print(json.dumps(rec, indent=1))
+    os.makedirs("results", exist_ok=True)
+    with open("results/hillclimb.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Roofline reporter: reads launch/dryrun JSONL records and prints the
+per-(arch x shape x mesh) three-term table (EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src python -m benchmarks.roofline results/dryrun_single.jsonl ...
+"""
+import json
+import sys
+
+
+def fmt(v, unit=""):
+    if v == 0:
+        return "0"
+    for scale, suf in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if abs(v) >= scale:
+            return f"{v/scale:.2f}{suf}{unit}"
+    return f"{v:.3g}{unit}"
+
+
+def load(paths):
+    recs = []
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                if line.strip():
+                    recs.append(json.loads(line))
+    return recs
+
+
+def report(recs, file=sys.stdout):
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'dominant':>10s} "
+           f"{'MODELfl':>9s} {'useful%':>8s} {'temp/dev':>9s}")
+    print(hdr, file=file)
+    for r in recs:
+        if not r.get("ok"):
+            print(f"{r['arch']:24s} {r['shape']:12s} {r.get('mesh',''):8s} "
+                  f"FAILED: {r.get('error','')[:60]}", file=file)
+            continue
+        rt = r["roofline"]
+        useful = 100.0 * r["model_flops"] / max(r["analytic_flops_global"], 1)
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{rt['compute_s']:10.4g} {rt['memory_s']:10.4g} "
+              f"{rt['collective_s']:10.4g} {rt['dominant']:>10s} "
+              f"{fmt(r['model_flops']):>9s} {useful:7.1f}% "
+              f"{fmt(r.get('temp_bytes_per_dev', 0), 'B'):>9s}", file=file)
+
+
+def main():
+    recs = load(sys.argv[1:] or ["results/dryrun_single.jsonl"])
+    report(recs)
+    bad = [r for r in recs if not r.get("ok")]
+    print(f"\n{len(recs)-len(bad)}/{len(recs)} combos compiled OK")
+    if bad:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

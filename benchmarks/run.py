@@ -1,0 +1,92 @@
+"""Benchmark harness: one function per paper table + kernel microbenches.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract:
+  * tables 2-6 (NB/LR/DT/RF/GBT x {C,PCA,SVD}), single vs 8 virtual devices
+    (in subprocesses so device counts don't leak);
+  * kernel microbenches (jnp oracle timings on CPU; Pallas bodies are
+    validated via interpret mode in tests — wall-clock kernel timing needs
+    real TPU);
+  * the roofline table when dry-run records exist (results/*.jsonl).
+"""
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def bench(fn, *a, reps=3, warmup=1):
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*a))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*a))
+    return (time.time() - t0) / reps * 1e6          # us
+
+
+def kernel_microbench():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+    xs = jnp.sort(jax.random.normal(key, (512, 5, 3000)), -1)
+    us = bench(lambda: ops.band_stats(xs))
+    print(f"kernel_band_stats_ref,{us:.0f},epochs_per_s={512/us*1e6:.0f}")
+    X = jax.random.normal(key, (8192, 75))
+    us = bench(lambda: ops.gram(X))
+    print(f"kernel_gram_ref,{us:.0f},gflops={2*8192*75*75/us/1e3:.1f}")
+    bins = jax.random.randint(key, (65536,), 0, 32)
+    node = jax.random.randint(key, (65536,), 0, 32)
+    stat = jax.random.normal(key, (65536, 6))
+    us = bench(lambda: ops.hist(bins, node, stat, 32, 32))
+    print(f"kernel_hist_ref,{us:.0f},melem_per_s={65536/us:.1f}")
+    q = jax.random.normal(key, (1, 1024, 8, 128)) * 0.2
+    us = bench(lambda: ops.swa_attention(q, q, q, window=256))
+    print(f"kernel_swa_ref,{us:.0f},ktok_per_s={1024/us*1e3:.0f}")
+
+
+def paper_tables(n, devices, extra=()):
+    cmd = [sys.executable, os.path.join(ROOT, "benchmarks", "paper_tables.py"),
+           "--n", str(n), "--devices", str(devices), *extra]
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    subprocess.check_call(cmd, env=env)
+
+
+def roofline_table():
+    import glob
+    paths = sorted(glob.glob(os.path.join(ROOT, "results", "dryrun*.jsonl")))
+    if not paths:
+        print("roofline: no results/dryrun*.jsonl yet — run "
+              "`python -m repro.launch.dryrun --all --out results/dryrun_single.jsonl`")
+        return
+    from benchmarks.roofline import load, report
+    report(load(paths))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--n", type=int, default=0)
+    args = ap.parse_args()
+    n = args.n or (8000 if args.quick else 20000)
+
+    print("== kernel microbenches (jnp oracle path on CPU) ==")
+    kernel_microbench()
+
+    print("\n== paper tables 2-6: single machine ==")
+    paper_tables(n, 1, ("--gbt-mllib2018",))
+    print("\n== paper tables 2-6: 8 virtual machines ==")
+    paper_tables(n, 8)
+
+    print("\n== roofline (from dry-run artifacts) ==")
+    roofline_table()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Ablation studies the paper lists as future work (§4):
+
+1. feature-group ablation — which of the 15 statistics matter;
+2. band ablation — which R&K frequency bands carry the signal;
+3. data-scaling curve — accuracy vs training-set size (the paper claims
+   500M examples; this shows where the curve flattens on the synthetic task);
+4. per-stage confusion — which stages are confusable (W/REM, S3/S4).
+
+    PYTHONPATH=src python examples/ablations.py [--n 16000]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core import ALGORITHMS, metrics
+from repro.core.estimator import DistContext
+from repro.data.pipeline import make_dataset
+from repro.data.synthetic_eeg import STAGE_NAMES
+
+STATS = ("mean", "hmean", "trimmed_mean", "energy", "entropy", "min",
+         "median", "max", "std", "skew", "q25", "q75", "iqr", "abs_skew",
+         "kurtosis")
+BANDS = ("delta", "theta", "alpha", "spindle", "beta")
+
+
+def acc_with(ds, cols, ctx):
+    algo = ALGORITHMS["lr"](n_classes=6)
+    p = algo.fit(ds["X_train"][:, cols], ds["y_train"], ctx)
+    rep = metrics.evaluate(ds["y_test"],
+                           algo.predict(p, ds["X_test"][:, cols]), 6, ctx)
+    return rep["accuracy"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=16000)
+    args = ap.parse_args()
+    ctx = DistContext()
+    ds = make_dataset(args.n, args.n // 4, chunk=4000)
+    full = acc_with(ds, np.arange(75), ctx)
+    print(f"full 75-feature LR accuracy: {full:.3f}\n")
+
+    print("== band ablation (LR, drop one band = its 15 features) ==")
+    for b, band in enumerate(BANDS):
+        cols = np.asarray([i for i in range(75) if i // 15 != b])
+        print(f"  -{band:8s}: {acc_with(ds, cols, ctx):.3f} "
+              f"(delta {acc_with(ds, cols, ctx)-full:+.3f})")
+    print("\n== single-band (only that band's 15 features) ==")
+    for b, band in enumerate(BANDS):
+        cols = np.arange(b * 15, (b + 1) * 15)
+        print(f"  {band:8s}: {acc_with(ds, cols, ctx):.3f}")
+
+    print("\n== statistic-group ablation (drop one stat across all bands) ==")
+    for s, stat in enumerate(STATS):
+        cols = np.asarray([i for i in range(75) if i % 15 != s])
+        print(f"  -{stat:12s}: {acc_with(ds, cols, ctx):.3f}")
+
+    print("\n== data-scaling curve (LR) ==")
+    for frac in (0.05, 0.1, 0.25, 0.5, 1.0):
+        n = int(len(ds["X_train"]) * frac)
+        sub = dict(ds, X_train=ds["X_train"][:n], y_train=ds["y_train"][:n])
+        print(f"  n={n:6d}: {acc_with(sub, np.arange(75), ctx):.3f}")
+
+    print("\n== per-stage confusion (LR, full features) ==")
+    algo = ALGORITHMS["lr"](n_classes=6)
+    p = algo.fit(ds["X_train"], ds["y_train"], ctx)
+    cm = np.asarray(metrics.confusion_matrix(
+        ds["y_test"], algo.predict(p, ds["X_test"]), 6))
+    cmn = cm / np.maximum(cm.sum(1, keepdims=True), 1)
+    print("        " + " ".join(f"{n:>6s}" for n in STAGE_NAMES))
+    for i, n in enumerate(STAGE_NAMES):
+        print(f"  {n:>5s} " + " ".join(f"{v:6.2f}" for v in cmn[i]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""The paper's experiment: single machine vs "more than one machine".
+
+    PYTHONPATH=src python examples/scalability_study.py [--n 20000] [--devices 8]
+
+Runs each classifier x {C, PCA, SVD} on one device, then re-runs the same
+workload data-parallel over N virtual host devices (a subprocess sets
+--xla_force_host_platform_device_count, so the parent process keeps its
+1-device view).  Wall times on virtual devices of ONE physical CPU are
+structural, not a hardware speedup claim — the distributed path's collective
+schedule is what's validated (EXPERIMENTS.md §Paper-tables).
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+WORKER = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                      "paper_tables.py")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--algos", default="nb,lr,dt,rf,gbt")
+    args = ap.parse_args()
+    env = dict(os.environ, PYTHONPATH="src")
+    for ndev in (1, args.devices):
+        print(f"\n=== {'single machine' if ndev == 1 else f'{ndev} machines (virtual)'} ===")
+        cmd = [sys.executable, WORKER, "--n", str(args.n),
+               "--devices", str(ndev), "--algos", args.algos,
+               "--transforms", "none,pca,svd"]
+        subprocess.check_call(cmd, env=env)
+
+
+if __name__ == "__main__":
+    main()

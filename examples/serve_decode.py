@@ -1,0 +1,33 @@
+"""Serve a small model with batched requests: prefill + token-by-token decode.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch qwen2-moe-a2.7b]
+
+Exercises the production serving split (prefill program emits the KV cache;
+decode program appends one token into the circular cache per step) on the
+reduced config — including the MoE expert-parallel path when the arch is MoE.
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-moe-a2.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", args.arch, "--smoke",
+        "--batch", str(args.batch), "--prompt-len", str(args.prompt_len),
+        "--gen", str(args.gen),
+    ]
+    print(" ".join(cmd))
+    raise SystemExit(subprocess.call(cmd, env={"PYTHONPATH": "src",
+                                               **__import__("os").environ}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Config registry: ``get_config(arch_id)`` / ``ARCH_IDS`` / smoke variants."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig, SleepConfig, reduce_config
+from repro.configs.shapes import (
+    SHAPES,
+    SHAPES_BY_NAME,
+    InputShape,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+)
+
+_MODULES: Dict[str, str] = {
+    "stablelm-1.6b": "stablelm_1_6b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "whisper-medium": "whisper_medium",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "internlm2-20b": "internlm2_20b",
+    "xlstm-1.3b": "xlstm_1_3b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return reduce_config(get_config(arch_id))
+
+
+__all__ = [
+    "ModelConfig", "SleepConfig", "reduce_config", "get_config",
+    "get_smoke_config", "ARCH_IDS", "SHAPES", "SHAPES_BY_NAME", "InputShape",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

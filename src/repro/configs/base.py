@@ -1,0 +1,254 @@
+"""Model / workload configuration system.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; the paper's
+own workload (distributed sleep-stage classification) is a :class:`SleepConfig`.
+Configs are plain frozen dataclasses — hashable, printable, and cheap — and the
+model code consumes nothing else.
+
+Block kinds
+-----------
+The transformer zoo assembles a stack of homogeneous *block groups* (so the
+runtime can ``lax.scan`` over each group's stacked parameters).  A block kind is
+one of:
+
+  ``attn``    pre-norm GQA attention + MLP (dense) or MoE
+  ``mamba``   Mamba selective-SSM block (+ MLP/MoE per config)
+  ``mlstm``   xLSTM matrix-memory block
+  ``slstm``   xLSTM scalar-memory block
+
+``layer_pattern()`` returns the per-layer kind + whether the layer's FFN is MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # -- identity ---------------------------------------------------------
+    name: str
+    arch_type: str                      # dense | moe | hybrid | ssm | vlm | audio
+    source: str = ""                    # citation (hf: / arXiv:)
+
+    # -- trunk ------------------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0                   # 0 -> d_model // n_heads
+    d_ff: int = 1024                    # dense MLP hidden (0 = no MLP, pure SSM)
+    vocab_size: int = 1024
+    norm: str = "rmsnorm"               # rmsnorm | layernorm
+    activation: str = "swiglu"          # swiglu | gelu
+    rope_theta: float = 10_000.0
+    pos_embedding: str = "rope"         # rope | learned | none
+    tie_embeddings: bool = False
+    max_seq_len: int = 1 << 20
+
+    # -- MoE ---------------------------------------------------------------
+    n_experts: int = 0                  # routed experts (0 = dense)
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_expert: int = 0                   # expert hidden dim (0 -> d_ff)
+    moe_every: int = 1                  # MoE FFN on layers where l % moe_every == moe_offset
+    moe_offset: int = 0
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+
+    # -- hybrid / SSM -------------------------------------------------------
+    attn_every: int = 1                 # hybrid: attention on l % attn_every == attn_offset,
+    attn_offset: int = 0                #         SSM (mamba) elsewhere
+    ssm_d_state: int = 16
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+    slstm_every: int = 0                # xlstm: sLSTM on l % slstm_every == 1 (0 = none)
+
+    # -- encoder/decoder (audio) --------------------------------------------
+    is_enc_dec: bool = False
+    n_enc_layers: int = 0
+    n_frames: int = 0                   # stubbed frontend: encoder frames per example
+
+    # -- VLM stub frontend ----------------------------------------------------
+    n_patches: int = 0                  # stubbed vision tower: patch embeddings per example
+
+    # -- serving ----------------------------------------------------------
+    sliding_window: int = 0             # 0 = full attention; >0 = SWA window
+    kv_dtype: str = ""                  # "" = dtype; "int8" = quantized cache
+
+    # -- numerics -----------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------ api
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def expert_ff(self) -> int:
+        return self.d_expert or self.d_ff
+
+    @property
+    def n_dec_layers(self) -> int:
+        return self.n_layers
+
+    def layer_pattern(self) -> Tuple[Tuple[str, bool], ...]:
+        """Per-decoder-layer (block_kind, is_moe_ffn)."""
+        out = []
+        for l in range(self.n_layers):
+            if self.slstm_every:
+                kind = "slstm" if (l % self.slstm_every == 1) else "mlstm"
+            elif self.attn_every > 1:
+                kind = "attn" if (l % self.attn_every == self.attn_offset) else "mamba"
+            elif self.arch_type == "ssm":
+                kind = "mlstm"
+            else:
+                kind = "attn"
+            moe = self.is_moe and (l % self.moe_every == self.moe_offset)
+            out.append((kind, moe))
+        return tuple(out)
+
+    # --------------------------------------------------------- param counts
+    def _ffn_params(self, moe: bool) -> int:
+        d = self.d_model
+        if moe:
+            per = (3 if self.activation == "swiglu" else 2) * d * self.expert_ff
+            routed = self.n_experts * per
+            shared = self.n_shared_experts * per
+            router = d * self.n_experts
+            return routed + shared + router
+        if self.d_ff == 0:
+            return 0
+        mult = 3 if self.activation == "swiglu" else 2
+        return mult * d * self.d_ff
+
+    def _ffn_active_params(self, moe: bool) -> int:
+        if not moe:
+            return self._ffn_params(False)
+        d = self.d_model
+        per = (3 if self.activation == "swiglu" else 2) * d * self.expert_ff
+        return (self.top_k + self.n_shared_experts) * per + d * self.n_experts
+
+    def _block_params(self, kind: str) -> int:
+        d, hd = self.d_model, self.hd
+        if kind == "attn":
+            q = d * self.n_heads * hd
+            kv = 2 * d * self.n_kv_heads * hd
+            o = self.n_heads * hd * d
+            return q + kv + o + 2 * d          # + norms
+        if kind == "mamba":
+            di = self.ssm_expand * d
+            in_proj = d * 2 * di
+            conv = di * self.ssm_d_conv
+            xproj = di * (2 * self.ssm_d_state + di // 16 + 1)  # B,C,dt(lowrank~di/16)
+            dtp = di // 16 * di
+            out = di * d
+            return in_proj + conv + xproj + dtp + out + di + d  # + A,D-ish + norm
+        if kind == "mlstm":
+            di = self.ssm_expand * d
+            nh = max(self.n_heads, 1)
+            # split up-proj, block-diagonal per-head q/k/v, i/f gates, down-proj
+            return (2 * d * di + 3 * di * di // nh + 2 * di * nh
+                    + di + di * d + d)
+        if kind == "slstm":
+            nh = max(self.n_heads, 1)
+            # 4 input gate mats + block-diagonal recurrent + bias
+            return 4 * d * d + 4 * d * d // nh + 4 * d + d
+        raise ValueError(kind)
+
+    def param_count(self) -> int:
+        """Total trunk+embedding params (used for MODEL_FLOPS and memory napkin)."""
+        n = self.vocab_size * self.d_model
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model
+        for kind, moe in self.layer_pattern():
+            n += self._block_params(kind) + self._ffn_params(moe)
+        if self.is_enc_dec:
+            for _ in range(self.n_enc_layers):
+                n += self._block_params("attn") + self._ffn_params(False)
+                n += self._block_params("attn")  # decoder cross-attn counted here
+        n += self.d_model
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        n = self.vocab_size * self.d_model
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model
+        for kind, moe in self.layer_pattern():
+            n += self._block_params(kind) + self._ffn_active_params(moe)
+        if self.is_enc_dec:
+            for _ in range(self.n_enc_layers):
+                n += self._block_params("attn") + self._ffn_params(False)
+                n += self._block_params("attn")
+        n += self.d_model
+        return n
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test variant of the same family: <=2 layers (enc-dec: 2+2),
+    d_model<=256, <=4 experts, tiny vocab/frontends.  Keeps kind pattern."""
+    d_model = min(cfg.d_model, 256)
+    n_heads = min(cfg.n_heads, 4)
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    while n_heads % n_kv:
+        n_kv -= 1
+    n_layers = min(cfg.n_layers, 2 if cfg.attn_every <= 1 and not cfg.slstm_every else 8)
+    kw = dict(
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=64 if cfg.head_dim else 0,
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 512),
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        n_shared_experts=min(cfg.n_shared_experts, 1),
+        d_expert=min(cfg.expert_ff, 256) if cfg.n_experts else 0,
+        n_enc_layers=min(cfg.n_enc_layers, 2),
+        n_frames=min(cfg.n_frames, 16),
+        n_patches=min(cfg.n_patches, 16),
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        dtype="float32",
+        param_dtype="float32",
+    )
+    return cfg.replace(**kw)
+
+
+# --------------------------------------------------------------------------
+# The paper's own workload: distributed sleep-stage classification.
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SleepConfig:
+    """Sleep-EDF classification per the paper (§2.2–2.4)."""
+    n_classes: int = 6                  # W, 1, 2, 3, 4, REM
+    n_features: int = 75                # 15 stats x 5 bands (§2.3)
+    n_bands: int = 5
+    sample_rate: int = 100              # Hz (sleep-EDF EEG)
+    epoch_seconds: int = 30             # R&K scoring epoch
+    transform: str = "none"             # none | pca | svd   (paper: C / PCA / SVD)
+    pca_dims: int = 16
+    seed: int = 0
+
+    @property
+    def epoch_len(self) -> int:
+        return self.sample_rate * self.epoch_seconds   # 3000 samples
+
+    # 5 bands per Rechtschaffen & Kales frequency ranges (paper Table 1)
+    BANDS: Tuple[Tuple[str, float, float], ...] = (
+        ("delta", 0.5, 4.0),
+        ("theta", 4.0, 8.0),
+        ("alpha", 8.0, 12.0),
+        ("spindle", 12.0, 15.0),
+        ("beta", 15.0, 30.0),
+    )

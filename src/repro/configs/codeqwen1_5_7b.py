@@ -1,0 +1,17 @@
+"""CodeQwen1.5-7B — dense qwen1.5-arch decoder.  [hf:Qwen/CodeQwen1.5-7B]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    arch_type="dense",
+    source="hf:Qwen/CodeQwen1.5-7B",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,          # GQA kv=32 (full MHA)
+    d_ff=13440,
+    vocab_size=92_416,
+    norm="rmsnorm",
+    activation="swiglu",
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,33 @@
+"""Jamba-1.5-Large 398B — hybrid Mamba+attention 1:7 interleave with MoE.
+[arXiv:2403.19887]
+
+One attention layer per 8 (l % 8 == attn_offset), Mamba elsewhere; MoE FFN on
+every other layer (16 experts, top-2), dense FFN otherwise.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    arch_type="hybrid",
+    source="arXiv:2403.19887",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,           # GQA kv=8
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65_536,
+    norm="rmsnorm",
+    activation="swiglu",
+    # hybrid: attention on layers l % 8 == 4, Mamba on the other 7
+    attn_every=8,
+    attn_offset=4,
+    ssm_d_state=16,
+    ssm_d_conv=4,
+    ssm_expand=2,
+    # MoE: 16 experts top-2 on every other layer
+    n_experts=16,
+    top_k=2,
+    moe_every=2,
+    moe_offset=1,
+)

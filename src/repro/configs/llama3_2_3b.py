@@ -1,0 +1,19 @@
+"""Llama-3.2-3B — small llama3 dense GQA decoder.  [hf:meta-llama/Llama-3.2-1B]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    arch_type="dense",
+    source="hf:meta-llama/Llama-3.2-1B",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,           # GQA kv=8
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=128_256,
+    norm="rmsnorm",
+    activation="swiglu",
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,26 @@
+"""LLaVA-NeXT (mistral-7B backbone) — VLM with anyres tiling.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+
+The vision tower (CLIP ViT-L/336 + 2-layer MLP projector) is a STUB per the
+carve-out: ``input_specs()`` supplies pre-projected patch embeddings of shape
+(batch, n_patches, d_model).  anyres tiling = base image + 4 tiles, 576
+patches each -> 2880 patch embeddings per image.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    arch_type="vlm",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,           # GQA kv=8 (mistral)
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32_000,
+    norm="rmsnorm",
+    activation="swiglu",
+    rope_theta=1_000_000.0,
+    n_patches=2880,         # anyres: (1 base + 4 tiles) x 576
+)

@@ -1,0 +1,23 @@
+"""Qwen2-MoE A2.7B — 4 shared + 60 routed experts top-4.
+[hf:Qwen/Qwen1.5-MoE-A2.7B]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    arch_type="moe",
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,          # GQA kv=16 (full MHA)
+    head_dim=128,
+    d_ff=1408,              # per-expert intermediate
+    vocab_size=151_936,
+    norm="rmsnorm",
+    activation="swiglu",
+    rope_theta=1_000_000.0,
+    n_experts=60,
+    top_k=4,
+    n_shared_experts=4,
+    d_expert=1408,
+)

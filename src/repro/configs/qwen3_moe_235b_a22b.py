@@ -1,0 +1,21 @@
+"""Qwen3-MoE 235B-A22B — 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    arch_type="moe",
+    source="hf:Qwen/Qwen3-30B-A3B",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,           # GQA kv=4
+    head_dim=128,
+    d_ff=1536,              # per-expert intermediate
+    vocab_size=151_936,
+    norm="rmsnorm",
+    activation="swiglu",
+    rope_theta=1_000_000.0,
+    n_experts=128,
+    top_k=8,
+    d_expert=1536,
+)

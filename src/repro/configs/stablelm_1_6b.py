@@ -1,0 +1,17 @@
+"""StableLM-2 1.6B — dense MHA decoder.  [hf:stabilityai/stablelm-2-1_6b]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    arch_type="dense",
+    source="hf:stabilityai/stablelm-2-1_6b",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,          # GQA kv=32 (full MHA)
+    d_ff=5632,
+    vocab_size=100_352,
+    norm="layernorm",       # stablelm-2 uses LayerNorm
+    activation="swiglu",
+    rope_theta=10_000.0,
+)

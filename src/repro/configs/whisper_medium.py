@@ -1,0 +1,25 @@
+"""Whisper-medium — encoder-decoder audio transformer.  [arXiv:2212.04356]
+
+The mel-spectrogram + conv1d feature extractor is a STUB per the carve-out:
+``input_specs()`` supplies conv-output frame embeddings (batch, 1500, d_model).
+Decoder: learned positions, LayerNorm, GeLU, cross-attention to the encoder.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    arch_type="audio",
+    source="arXiv:2212.04356",
+    n_layers=24,            # decoder layers
+    n_enc_layers=24,
+    is_enc_dec=True,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,          # GQA kv=16 (full MHA)
+    d_ff=4096,
+    vocab_size=51_865,
+    norm="layernorm",
+    activation="gelu",
+    pos_embedding="learned",
+    n_frames=1500,          # 30 s audio -> 1500 conv frames
+)

@@ -1,0 +1,26 @@
+"""xLSTM-1.3B — sLSTM + mLSTM recurrent blocks (attention-free).
+[arXiv:2405.04517]
+
+48 blocks: mLSTM (matrix memory, parallelizable via associative scan) with an
+sLSTM (scalar memory, sequential) block every 8th position (l % 8 == 1),
+mirroring the paper's sparse sLSTM placement.  d_ff=0: xLSTM blocks carry
+their own up/down projections (expand=2); there is no separate FFN.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    arch_type="ssm",
+    source="arXiv:2405.04517",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,           # mLSTM memory heads
+    d_ff=0,                 # no separate FFN (per assignment)
+    vocab_size=50_304,
+    norm="layernorm",
+    activation="gelu",
+    pos_embedding="none",   # recurrence encodes position
+    slstm_every=8,
+    ssm_expand=2,
+)

@@ -1,0 +1,24 @@
+# The paper's primary contribution: distributed sleep-stage classification —
+# Spark-MLlib-style algorithms as data-parallel JAX (shard_map + psum).
+from repro.core.estimator import DistContext, tree_aggregate
+from repro.core import metrics
+from repro.core.naive_bayes import NaiveBayes
+from repro.core.logistic_regression import LogisticRegression
+from repro.core.linear_svm import LinearSVM
+from repro.core.trees import DecisionTree
+from repro.core.forest import RandomForest
+from repro.core.gbt import GradientBoostedTrees
+from repro.core.adaboost import AdaBoost
+from repro.core.pca import PCA
+from repro.core.svd import SVD
+
+ALGORITHMS = {
+    "nb": NaiveBayes,
+    "lr": LogisticRegression,
+    "svm": LinearSVM,
+    "dt": DecisionTree,
+    "rf": RandomForest,
+    "gbt": GradientBoostedTrees,
+    "ada": AdaBoost,
+}
+TRANSFORMS = {"none": None, "pca": PCA, "svd": SVD}

@@ -1,0 +1,86 @@
+"""AdaBoost (SAMME) over histogram decision stumps (paper §2.4.3).
+
+Multiclass SAMME: per round, fit a weighted shallow tree, compute weighted
+error, re-weight examples.  Example weights live on their shards; the error
+and the stump histograms are the only cross-shard traffic (psum) — the same
+sufficient-statistics contract as everything else.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.estimator import DistContext
+from repro.core.trees import binarize, fit_bins, grow_forest, forest_node_values
+
+
+def _stump_predict(tree, xb):
+    walk = forest_node_values(tree, xb)          # (1,n,L,K)
+    cnt = walk.sum(-1)
+    best = jnp.argmax(walk, axis=-1)
+    pred = best[:, :, 0]
+    for lvl in range(1, walk.shape[2]):
+        pred = jnp.where(cnt[:, :, lvl] > 0, best[:, :, lvl], pred)
+    return pred[0]                                # (n,)
+
+
+@dataclass
+class AdaBoost:
+    n_classes: int
+    n_rounds: int = 20
+    depth: int = 2
+    n_bins: int = 32
+
+    def fit(self, X, y, ctx: DistContext = DistContext(), weights=None, key=None):
+        n, F = X.shape
+        K = self.n_classes
+        edges = fit_bins(X, self.n_bins)
+        Xb = binarize(X, edges)
+        oh = jax.nn.one_hot(y, K, dtype=jnp.float32)
+
+        def run(xb, y, oh):
+            psum = (lambda v: v) if ctx.mesh is None else \
+                (lambda v: jax.lax.psum(v, ctx.axis))
+            w0 = jnp.ones(y.shape, jnp.float32)
+
+            def round_fn(w, _):
+                wsum = psum(w.sum())
+                wn = w / jnp.maximum(wsum, 1e-12)
+                stat = (oh * wn[:, None])[None]             # (1,n,K)
+                tree = grow_forest(xb, stat, depth=self.depth,
+                                   n_bins=self.n_bins, psum=psum)
+                pred = _stump_predict(tree, xb)
+                miss = (pred != y).astype(jnp.float32)
+                err = jnp.clip(psum((wn * miss).sum()), 1e-9, 1 - 1e-9)
+                alpha = jnp.log((1 - err) / err) + jnp.log(K - 1.0)
+                w = wn * jnp.exp(alpha * miss)
+                return w, (tree, alpha)
+
+            _, (trees, alphas) = jax.lax.scan(round_fn, w0, None,
+                                              length=self.n_rounds)
+            return trees, alphas
+
+        if ctx.mesh is None:
+            trees, alphas = jax.jit(run)(Xb, y, oh)
+        else:
+            sh = jax.shard_map(
+                run, mesh=ctx.mesh,
+                in_specs=(P(ctx.axis, None), P(ctx.axis), P(ctx.axis, None)),
+                out_specs=({"feat": P(), "thr": P(), "value": P()}, P()),
+                check_vma=False)
+            trees, alphas = jax.jit(sh)(Xb, y, oh)
+        return {"trees": trees, "alphas": alphas, "edges": edges}
+
+    def predict(self, params, X):
+        Xb = binarize(X, params["edges"])
+        R = params["alphas"].shape[0]
+        votes = 0.0
+        for r in range(R):
+            tr = jax.tree.map(lambda a: a[r], params["trees"])
+            pred = _stump_predict(tr, Xb)
+            votes = votes + params["alphas"][r] * jax.nn.one_hot(
+                pred, self.n_classes, dtype=jnp.float32)
+        return jnp.argmax(votes, axis=-1)

@@ -1,0 +1,58 @@
+"""K-fold cross-validation + grid model selection for the classifier suite
+(the paper's "future works" asks for elaborated diagnosis studies — this is
+the substrate for them)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.core.estimator import DistContext
+
+
+def kfold_indices(n: int, k: int, seed: int = 0):
+    perm = np.random.default_rng(seed).permutation(n)
+    folds = np.array_split(perm, k)
+    for i in range(k):
+        test = folds[i]
+        train = np.concatenate([folds[j] for j in range(k) if j != i])
+        yield train, test
+
+
+def cross_validate(algo_factory, X, y, *, n_classes: int, k: int = 5,
+                   ctx: DistContext = DistContext(), seed: int = 0
+                   ) -> Dict[str, float]:
+    """Returns mean/std accuracy over k folds."""
+    accs = []
+    X = np.asarray(X)
+    y = np.asarray(y)
+    for tr, te in kfold_indices(len(X), k, seed):
+        algo = algo_factory()
+        p = algo.fit(jnp.asarray(X[tr]), jnp.asarray(y[tr]), ctx,
+                     key=jax.random.PRNGKey(seed))
+        rep = metrics.evaluate(jnp.asarray(y[te]),
+                               algo.predict(p, jnp.asarray(X[te])), n_classes)
+        accs.append(rep["accuracy"])
+    return {"acc_mean": float(np.mean(accs)), "acc_std": float(np.std(accs)),
+            "folds": k}
+
+
+def grid_search(algo_cls, grid: Dict[str, Sequence], X, y, *, n_classes: int,
+                k: int = 3, ctx: DistContext = DistContext()) -> Dict:
+    """Exhaustive grid over dataclass fields; returns the best setting."""
+    keys = list(grid)
+    best = None
+    results = []
+    import itertools
+    for combo in itertools.product(*(grid[kk] for kk in keys)):
+        kw = dict(zip(keys, combo))
+        res = cross_validate(lambda: algo_cls(n_classes=n_classes, **kw),
+                             X, y, n_classes=n_classes, k=k, ctx=ctx)
+        results.append({**kw, **res})
+        if best is None or res["acc_mean"] > best["acc_mean"]:
+            best = {**kw, **res}
+    return {"best": best, "all": results}

@@ -1,0 +1,75 @@
+"""Distributed estimator substrate — Spark's treeAggregate as an ICI psum.
+
+Every algorithm in the paper reduces to: partition the examples over
+executors, compute local sufficient statistics, merge.  Spark merges via a
+tree of JVM shuffles; on a TPU mesh the same contract is a ``shard_map`` over
+the ``data`` axis with a ``lax.psum`` merge (DESIGN §1/§2).
+
+``DistContext(mesh=None)`` runs the identical code path single-device — the
+paper's "on the single machine" configuration.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class DistContext:
+    """mesh=None: single machine.  Otherwise: data-parallel over ``axis``."""
+    mesh: Optional[Mesh] = None
+    axis: str = "data"
+
+    @property
+    def ways(self) -> int:
+        return 1 if self.mesh is None else self.mesh.shape[self.axis]
+
+    def shard_batch(self, *arrays):
+        """Place arrays batch-sharded on the mesh (host -> device)."""
+        if self.mesh is None:
+            return arrays if len(arrays) > 1 else arrays[0]
+        out = tuple(
+            jax.device_put(a, NamedSharding(
+                self.mesh, P(self.axis, *([None] * (a.ndim - 1)))))
+            for a in arrays)
+        return out if len(out) > 1 else out[0]
+
+
+def tree_aggregate(stats_fn: Callable, ctx: DistContext, *arrays,
+                   static_args: Tuple = ()) -> Any:
+    """Compute ``sum over shards of stats_fn(local_arrays)`` — the Spark
+    ``treeAggregate`` contract.  stats_fn returns a pytree of arrays that add.
+    """
+    f = functools.partial(stats_fn, *static_args)
+    if ctx.mesh is None:
+        return jax.jit(f)(*arrays)
+
+    def local(*xs):
+        return jax.tree.map(lambda s: jax.lax.psum(s, ctx.axis), f(*xs))
+
+    nd = len(arrays)
+    in_specs = tuple(P(ctx.axis, *([None] * (a.ndim - 1))) for a in arrays)
+    out_spec = P()  # replicated after psum
+    shmapped = jax.shard_map(
+        local, mesh=ctx.mesh, in_specs=in_specs,
+        out_specs=jax.tree.map(lambda _: out_spec, jax.eval_shape(f, *arrays)),
+        check_vma=False)
+    return jax.jit(shmapped)(*arrays)
+
+
+def pad_examples(X, y, ways: int):
+    """Pad example count to a multiple of the shard count (weight-0 rows)."""
+    n = X.shape[0]
+    rem = (-n) % ways
+    if rem == 0:
+        return X, y, jnp.ones((n,), jnp.float32)
+    Xp = jnp.concatenate([X, jnp.zeros((rem,) + X.shape[1:], X.dtype)], 0)
+    yp = jnp.concatenate([y, jnp.zeros((rem,), y.dtype)], 0)
+    w = jnp.concatenate([jnp.ones((n,), jnp.float32),
+                         jnp.zeros((rem,), jnp.float32)], 0)
+    return Xp, yp, w

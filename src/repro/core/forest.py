@@ -1,0 +1,64 @@
+"""Random Forest (§2.4.1): Poisson bootstrap + column sampling.
+
+All trees grow level-synchronously in ONE SPMD program (the tree index is a
+batch dim of the histogram — trees.grow_forest).  Bootstrapping uses
+Poisson(1) example weights, the standard distributed approximation (Spark
+uses it too: no global resample shuffle needed — weights are local).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.estimator import DistContext
+from repro.core.trees import binarize, fit_bins, grow_forest, predict_class_forest
+
+
+@dataclass
+class RandomForest:
+    n_classes: int
+    n_trees: int = 20
+    depth: int = 5
+    n_bins: int = 32
+    feature_frac: float = 0.35     # ~ sqrt(75)/75 ... 1/3, MLlib 'onethird'
+
+    def fit(self, X, y, ctx: DistContext = DistContext(), weights=None,
+            key=jax.random.PRNGKey(0)):
+        n, F = X.shape
+        edges = fit_bins(X, self.n_bins)
+        Xb = binarize(X, edges)
+        kb, kf = jax.random.split(key)
+        # Poisson(1) bootstrap weights per (tree, example)
+        bw = jax.random.poisson(kb, 1.0, (self.n_trees, n)).astype(jnp.float32)
+        if weights is not None:
+            bw = bw * weights[None]
+        fmask = (jax.random.uniform(kf, (self.n_trees, F))
+                 < self.feature_frac).astype(jnp.float32)
+        fmask = jnp.maximum(fmask, jax.nn.one_hot(  # >=1 feature per tree
+            jax.random.randint(kf, (self.n_trees,), 0, F), F))
+        oh = jax.nn.one_hot(y, self.n_classes, dtype=jnp.float32)
+        stat = oh[None] * bw[:, :, None]                       # (Tr,n,K)
+
+        def run(xb, st):
+            psum = (lambda h: h) if ctx.mesh is None else \
+                (lambda h: jax.lax.psum(h, ctx.axis))
+            return grow_forest(xb, st, depth=self.depth, n_bins=self.n_bins,
+                               psum=psum, feature_mask=fmask)
+
+        if ctx.mesh is None:
+            tree = jax.jit(run)(Xb, stat)
+        else:
+            sh = jax.shard_map(run, mesh=ctx.mesh,
+                               in_specs=(P(ctx.axis, None),
+                                         P(None, ctx.axis, None)),
+                               out_specs=P(), check_vma=False)
+            tree = jax.jit(sh)(Xb, stat)
+        return {"tree": tree, "edges": edges}
+
+    def predict(self, params, X):
+        Xb = binarize(X, params["edges"])
+        ens, _ = predict_class_forest(params["tree"], Xb)
+        return ens

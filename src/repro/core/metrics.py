@@ -1,0 +1,55 @@
+"""Evaluation metrics per the paper §3 (eqs. 1-3).
+
+The confusion matrix is built as a one-hot x one-hot matmul — the
+scatter-free MXU formulation (DESIGN §2) — and aggregated across shards with
+``tree_aggregate`` (it's a sufficient statistic too).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimator import DistContext, tree_aggregate
+
+
+def confusion_matrix(y_true, y_pred, n_classes: int,
+                     ctx: DistContext = DistContext(), weights=None):
+    def stats(yt, yp, w):
+        ot = jax.nn.one_hot(yt, n_classes, dtype=jnp.float32) * w[:, None]
+        op = jax.nn.one_hot(yp, n_classes, dtype=jnp.float32)
+        return ot.T @ op                           # (true, pred)
+
+    if weights is None:
+        weights = jnp.ones(y_true.shape[:1], jnp.float32)
+    return tree_aggregate(stats, ctx, y_true, y_pred, weights)
+
+
+def classification_report(cm) -> Dict[str, float]:
+    """Accuracy (eq.1), macro precision (eq.2), macro recall (eq.3), F1."""
+    cm = jnp.asarray(cm, jnp.float32)
+    tp = jnp.diag(cm)
+    support = cm.sum(axis=1)                       # true counts
+    predicted = cm.sum(axis=0)
+    total = cm.sum()
+    acc = tp.sum() / jnp.maximum(total, 1)
+    prec_c = tp / jnp.maximum(predicted, 1e-9)
+    rec_c = tp / jnp.maximum(support, 1e-9)
+    present = support > 0
+    nc = jnp.maximum(present.sum(), 1)
+    precision = jnp.where(present, prec_c, 0).sum() / nc
+    recall = jnp.where(present, rec_c, 0).sum() / nc
+    f1_c = 2 * prec_c * rec_c / jnp.maximum(prec_c + rec_c, 1e-9)
+    f1 = jnp.where(present, f1_c, 0).sum() / nc
+    return {
+        "accuracy": float(acc), "precision": float(precision),
+        "recall": float(recall), "f1": float(f1),
+        "per_class_precision": [float(x) for x in prec_c],
+        "per_class_recall": [float(x) for x in rec_c],
+    }
+
+
+def evaluate(y_true, y_pred, n_classes: int,
+             ctx: DistContext = DistContext()) -> Dict[str, float]:
+    return classification_report(confusion_matrix(y_true, y_pred, n_classes, ctx))

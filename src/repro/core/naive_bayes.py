@@ -1,0 +1,45 @@
+"""Gaussian Naive Bayes via one psum'd pass of per-class moments (§2.4.5).
+
+Sufficient statistics: per-class (count, sum, sum-of-squares) — one
+``tree_aggregate``; the model (priors, means, variances) is replicated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimator import DistContext, tree_aggregate
+
+
+@dataclass
+class NaiveBayes:
+    n_classes: int
+    var_smoothing: float = 1e-6
+
+    def fit(self, X, y, ctx: DistContext = DistContext(), weights=None, key=None):
+        K = self.n_classes
+
+        def stats(X, y, w):
+            oh = jax.nn.one_hot(y, K, dtype=jnp.float32) * w[:, None]  # (n,K)
+            count = oh.sum(0)                                          # (K,)
+            s1 = oh.T @ X                                              # (K,F)
+            s2 = oh.T @ (X * X)
+            return {"count": count, "s1": s1, "s2": s2}
+
+        if weights is None:
+            weights = jnp.ones(X.shape[:1], jnp.float32)
+        st = tree_aggregate(stats, ctx, X, y, weights)
+        cnt = jnp.maximum(st["count"], 1e-9)[:, None]
+        mean = st["s1"] / cnt
+        var = jnp.maximum(st["s2"] / cnt - mean ** 2, 0) + self.var_smoothing
+        prior = st["count"] / jnp.maximum(st["count"].sum(), 1e-9)
+        return {"mean": mean, "var": var,
+                "log_prior": jnp.log(jnp.maximum(prior, 1e-12))}
+
+    def predict(self, params, X):
+        mean, var = params["mean"], params["var"]             # (K,F)
+        ll = -0.5 * (jnp.log(2 * jnp.pi * var)[None]
+                     + (X[:, None, :] - mean[None]) ** 2 / var[None]).sum(-1)
+        return jnp.argmax(ll + params["log_prior"][None], axis=-1)

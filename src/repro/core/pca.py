@@ -1,0 +1,44 @@
+"""Distributed PCA via the Gram matrix (§3: the paper's PCA variant).
+
+cov = E[xx^T] - mu mu^T with X^T X accumulated shard-locally (the Pallas
+``gram`` kernel provides the MXU-tiled accumulation — kernels/gram.py) and
+psum-merged; the (F,F) eigendecomposition is replicated — exactly MLlib's
+RowMatrix.computePrincipalComponents split of work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimator import DistContext, tree_aggregate
+
+
+def _gram_stats(X):
+    from repro.kernels import ops as kops
+    g = kops.gram(X)                       # X^T X, Pallas kernel or jnp ref
+    return {"g": g, "s": X.sum(0),
+            "n": jnp.asarray(X.shape[0], jnp.float32)}
+
+
+@dataclass
+class PCA:
+    n_components: int = 16
+
+    def fit(self, X, ctx: DistContext = DistContext(), key=None):
+        st = tree_aggregate(_gram_stats, ctx, X)
+        n = jnp.maximum(st["n"], 1.0)
+        mu = st["s"] / n
+        cov = st["g"] / n - jnp.outer(mu, mu)
+        evals, evecs = jnp.linalg.eigh(cov)            # ascending
+        idx = jnp.argsort(evals)[::-1][: self.n_components]
+        return {"mean": mu, "components": evecs[:, idx],
+                "explained": evals[idx]}
+
+    def transform(self, params, X):
+        return (X - params["mean"]) @ params["components"]
+
+    def fit_transform(self, X, ctx: DistContext = DistContext(), key=None):
+        p = self.fit(X, ctx)
+        return p, self.transform(p, X)

@@ -1,0 +1,228 @@
+"""Binned, level-wise histogram decision trees — MLlib's algorithm, MXU-shaped.
+
+Spark MLlib grows trees level-by-level: each executor builds per-(node,
+feature, bin) label histograms over its partition, the driver merges them and
+picks splits.  We keep exactly that structure (it is the paper's §2.4.1/2.4.4
+workhorse) but adapt it to TPU (DESIGN §2):
+
+  * features are quantile-binned to uint8 (``fit_bins``/``binarize``);
+  * per-level histograms are segment-sums over a fused (tree, node, bin)
+    index — scatter of 4-byte stats, never of activations; the Pallas
+    ``hist`` kernel provides the MXU one-hot-matmul formulation of the same
+    contraction (kernels/hist.py) for the hot path;
+  * histogram merging is a ``psum`` over the mesh ``data`` axis (Spark's
+    treeAggregate);
+  * a whole forest grows simultaneously — the tree index is just another
+    batch dimension of the histogram.
+
+Trees are complete binary trees of fixed ``depth`` (children of i are
+2i+1/2i+2).  Split scoring: Gini gain (classification) or Newton gain
+G_L^2/(H_L+lam) + G_R^2/(H_R+lam) (regression, used by GBT).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimator import DistContext
+
+
+# ------------------------------------------------------------------ binning
+def fit_bins(X, n_bins: int = 32):
+    """Quantile bin edges (F, n_bins-1) — MLlib's findSplitsBins."""
+    qs = jnp.linspace(0.0, 100.0, n_bins + 1)[1:-1]
+    return jnp.percentile(X, qs, axis=0).T                 # (F, B-1)
+
+
+def binarize(X, edges):
+    """X (n,F) -> uint8 bins via branchless comparisons (vectorizes on VPU)."""
+    return (X[:, :, None] >= edges[None]).sum(-1).astype(jnp.uint8)
+
+
+# ------------------------------------------------------- histogram builder
+def _level_hist(Xb, pos, stat, n_slots: int, n_bins: int, psum):
+    """Histogram over (tree, node-slot, feature, bin, channel).
+
+    Xb: (n,F) uint8; pos: (Tr,n) int32 node slots; stat: (Tr,n,C).
+    Returns (Tr, n_slots, F, B, C), psum-merged across shards.
+    """
+    Tr, n, C = stat.shape
+    F = Xb.shape[1]
+    B = n_bins
+    t_off = (jnp.arange(Tr, dtype=jnp.int32) * (n_slots * B))[:, None]
+    base = t_off + pos * B                                  # (Tr,n)
+    data = stat.reshape(Tr * n, C)
+
+    def per_feature(xb_col):
+        ids = (base + xb_col[None, :]).reshape(Tr * n)
+        return jax.ops.segment_sum(data, ids, num_segments=Tr * n_slots * B)
+
+    hists = jax.lax.map(per_feature, Xb.T.astype(jnp.int32))  # (F, Tr*S*B, C)
+    hists = hists.reshape(F, Tr, n_slots, B, C).transpose(1, 2, 0, 3, 4)
+    return psum(hists)
+
+
+def _gini_scores(hist, count_eps=1e-9):
+    """hist: (Tr,S,F,B,K) class counts -> split scores (Tr,S,F,B-1).
+
+    Score = weighted impurity decrease of splitting node at bin <= b."""
+    left = jnp.cumsum(hist, axis=3)[..., :-1, :]            # (Tr,S,F,B-1,K)
+    total = hist.sum(3, keepdims=True)                      # (Tr,S,F,1,K)
+    right = total - left
+    nl = left.sum(-1)
+    nr = right.sum(-1)
+    nt = nl + nr
+
+    def gini_counts(c, n):
+        p = c / jnp.maximum(n[..., None], count_eps)
+        return 1.0 - jnp.sum(p * p, axis=-1)
+
+    g_t = gini_counts(jnp.broadcast_to(total, left.shape), nt)
+    g_l = gini_counts(left, nl)
+    g_r = gini_counts(right, nr)
+    gain = nt * g_t - (nl * g_l + nr * g_r)
+    return jnp.where(nt > 0, gain, -jnp.inf)
+
+
+def _newton_scores(hist, lam: float = 1.0):
+    """hist: (Tr,S,F,B,3) with channels (G,H,count) -> scores (Tr,S,F,B-1)."""
+    left = jnp.cumsum(hist, axis=3)[..., :-1, :]
+    total = hist.sum(3, keepdims=True)
+    right = total - left
+    gl, hl = left[..., 0], left[..., 1]
+    gr, hr = right[..., 0], right[..., 1]
+    score = gl * gl / (hl + lam) + gr * gr / (hr + lam)
+    return jnp.where((left[..., 2] > 0) & (right[..., 2] > 0), score, -jnp.inf)
+
+
+def grow_forest(Xb, stat, *, depth: int, n_bins: int, psum,
+                feature_mask=None, mode: str = "gini", lam: float = 1.0):
+    """Grow Tr complete trees of ``depth`` simultaneously.
+
+    Xb: (n,F) uint8; stat: (Tr,n,C) per-sample channel stats
+    (classification: one-hot(y) * weight; regression: (g*w, h*w, w)).
+    feature_mask: optional (Tr,F) in {0,1} — random-forest column sampling.
+    Returns {'feat': (Tr,T), 'thr': (Tr,T), 'value': (Tr,T,C)} with
+    T = 2^(depth+1) - 1 complete-tree nodes.
+    """
+    Tr, n, C = stat.shape
+    F = Xb.shape[1]
+    pos = jnp.zeros((Tr, n), jnp.int32)
+    feats, thrs, values = [], [], []
+    score_fn = functools.partial(_newton_scores, lam=lam) \
+        if mode == "newton" else _gini_scores
+
+    for d in range(depth):
+        S = 1 << d
+        hist = _level_hist(Xb, pos, stat, S, n_bins, psum)  # (Tr,S,F,B,C)
+        values.append(hist[:, :, 0].sum(2))                 # (Tr,S,C) node totals
+        scores = score_fn(hist)                             # (Tr,S,F,B-1)
+        if feature_mask is not None:
+            scores = jnp.where(feature_mask[:, None, :, None] > 0,
+                               scores, -jnp.inf)
+        flat = scores.reshape(Tr, S, F * (n_bins - 1))
+        best = jnp.argmax(flat, axis=-1)                    # (Tr,S)
+        feat = (best // (n_bins - 1)).astype(jnp.int32)
+        thr = (best % (n_bins - 1)).astype(jnp.int32)
+        feats.append(feat)
+        thrs.append(thr)
+        # route samples: right if bin > thr
+        f_i = jnp.take_along_axis(feat, pos, axis=1)        # (Tr,n)
+        t_i = jnp.take_along_axis(thr, pos, axis=1)
+        xb_if = Xb.astype(jnp.int32)[jnp.arange(n)[None, :], f_i]
+        go = (xb_if > t_i).astype(jnp.int32)
+        pos = 2 * pos + go                                  # slot within next level
+    # leaf values
+    S = 1 << depth
+    hist = _level_hist(Xb, pos, stat, S, n_bins, psum)
+    values.append(hist[:, :, 0].sum(2))
+
+    feat_arr = jnp.concatenate(
+        feats + [jnp.zeros((Tr, S), jnp.int32)], axis=1)    # leaves: dummy
+    thr_arr = jnp.concatenate(
+        thrs + [jnp.full((Tr, S), n_bins, jnp.int32)], axis=1)
+    val_arr = jnp.concatenate(values, axis=1)               # (Tr,T,C)
+    return {"feat": feat_arr, "thr": thr_arr, "value": val_arr}
+
+
+def forest_node_values(tree, Xb):
+    """Descend all trees; returns (value_walk (Tr,n,depth+1,C))."""
+    Tr, T = tree["feat"].shape
+    n = Xb.shape[0]
+    D = (T + 1).bit_length() - 2        # T = 2^(D+1) - 1
+    node = jnp.zeros((Tr, n), jnp.int32)
+    vals = []
+    Xi = Xb.astype(jnp.int32)
+    for d in range(D + 1):
+        vals.append(tree["value"][jnp.arange(Tr)[:, None], node])
+        if d == D:
+            break
+        f_i = tree["feat"][jnp.arange(Tr)[:, None], node]
+        t_i = tree["thr"][jnp.arange(Tr)[:, None], node]
+        xb = Xi[jnp.arange(n)[None, :], f_i]
+        node = 2 * node + 1 + (xb > t_i).astype(jnp.int32)
+    return jnp.stack(vals, axis=2)                          # (Tr,n,D+1,C)
+
+
+def predict_class_forest(tree, Xb):
+    """Majority vote over trees; per tree, deepest node with support wins."""
+    walk = forest_node_values(tree, Xb)                     # (Tr,n,L,C)
+    cnt = walk.sum(-1)                                      # (Tr,n,L)
+    best = jnp.argmax(walk, axis=-1)                        # (Tr,n,L)
+    pred = best[:, :, 0]
+    for lvl in range(1, walk.shape[2]):
+        pred = jnp.where(cnt[:, :, lvl] > 0, best[:, :, lvl], pred)
+    votes = jax.nn.one_hot(pred, walk.shape[-1], dtype=jnp.float32).sum(0)
+    return jnp.argmax(votes, axis=-1), pred                 # ensemble, per-tree
+
+
+def predict_value_forest(tree, Xb, lam: float = 1.0):
+    """Regression leaf values -G/(H+lam), summed over trees (GBT uses lr)."""
+    walk = forest_node_values(tree, Xb)                     # (Tr,n,L,3)
+    leaf = walk[:, :, -1]
+    val = -leaf[..., 0] / (leaf[..., 1] + lam)
+    return val                                              # (Tr,n)
+
+
+# ----------------------------------------------------------- public classes
+@dataclass
+class DecisionTree:
+    n_classes: int
+    depth: int = 5
+    n_bins: int = 32
+
+    def fit(self, X, y, ctx: DistContext = DistContext(), weights=None, key=None):
+        edges = fit_bins(X, self.n_bins)
+        Xb = binarize(X, edges)
+        if weights is None:
+            weights = jnp.ones(X.shape[:1], jnp.float32)
+        stat = (jax.nn.one_hot(y, self.n_classes, dtype=jnp.float32)
+                * weights[:, None])[None]                   # (1,n,K)
+
+        if ctx.mesh is None:
+            tree = jax.jit(lambda xb, st: grow_forest(
+                xb, st, depth=self.depth, n_bins=self.n_bins,
+                psum=lambda h: h))(Xb, stat)
+        else:
+            from jax.sharding import PartitionSpec as P
+
+            def local(xb, st):
+                return grow_forest(
+                    xb, st, depth=self.depth, n_bins=self.n_bins,
+                    psum=lambda h: jax.lax.psum(h, ctx.axis))
+
+            sh = jax.shard_map(
+                local, mesh=ctx.mesh,
+                in_specs=(P(ctx.axis, None), P(None, ctx.axis, None)),
+                out_specs=P(), check_vma=False)
+            tree = jax.jit(sh)(Xb, stat)
+        return {"tree": tree, "edges": edges}
+
+    def predict(self, params, X):
+        Xb = binarize(X, params["edges"])
+        ens, _ = predict_class_forest(params["tree"], Xb)
+        return ens

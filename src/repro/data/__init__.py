@@ -1,0 +1,3 @@
+from repro.data.synthetic_eeg import STAGE_NAMES, synth_epochs
+from repro.data.features import extract_features, FEATURE_NAMES
+from repro.data.pipeline import make_dataset, token_stream

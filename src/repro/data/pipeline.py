@@ -1,0 +1,70 @@
+"""Host-side data pipeline for both workloads.
+
+* ``make_dataset``: synthesize EEG -> extract 75 features -> normalize ->
+  train/test split, with batch placement onto the mesh data axis (the
+  classifier path — DistContext.shard_batch does device placement).
+* ``token_stream``: synthetic token batches for the LM training driver
+  (deterministic per-step keys so runs are reproducible/resumable).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SleepConfig
+from repro.data.features import extract_features
+from repro.data.synthetic_eeg import synth_epochs
+
+
+def make_dataset(n_train: int, n_test: int, cfg: SleepConfig = SleepConfig(),
+                 seed: int = 0, chunk: int = 4096, use_kernel: bool = True
+                 ) -> Dict[str, jnp.ndarray]:
+    """Synthesize + featurize in chunks (bounds FFT memory), z-normalize."""
+    key = jax.random.PRNGKey(seed)
+    total = n_train + n_test
+    feats, labels = [], []
+    extract = jax.jit(lambda x: extract_features(x, cfg, use_kernel=use_kernel))
+    for i in range(0, total, chunk):
+        k = jax.random.fold_in(key, i)
+        m = min(chunk, total - i)
+        X, y = synth_epochs(k, m, cfg)
+        feats.append(np.asarray(extract(X)))
+        labels.append(np.asarray(y))
+    X = np.concatenate(feats)
+    y = np.concatenate(labels)
+    mu = X[:n_train].mean(0)
+    sd = X[:n_train].std(0) + 1e-6
+    X = (X - mu) / sd
+    return {
+        "X_train": jnp.asarray(X[:n_train]), "y_train": jnp.asarray(y[:n_train]),
+        "X_test": jnp.asarray(X[n_train:]), "y_test": jnp.asarray(y[n_train:]),
+    }
+
+
+def token_stream(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                 start_step: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Synthetic LM batches: Zipf-ish token draws + shifted labels, plus the
+    stubbed frontend embeddings for VLM/audio archs."""
+    key = jax.random.PRNGKey(seed)
+    step = start_step
+    n_text = seq - (cfg.n_patches or 0)
+    ranks = jnp.arange(1, cfg.vocab_size + 1, dtype=jnp.float32)
+    probs = (1.0 / ranks) / jnp.sum(1.0 / ranks)
+    while True:
+        k = jax.random.fold_in(key, step)
+        k1, k2 = jax.random.split(k)
+        toks = jax.random.choice(k1, cfg.vocab_size, (batch, n_text + 1),
+                                 p=probs)
+        out = {"tokens": toks[:, :-1].astype(jnp.int32),
+               "labels": toks[:, 1:].astype(jnp.int32)}
+        if cfg.n_patches:
+            out["frontend"] = 0.02 * jax.random.normal(
+                k2, (batch, cfg.n_patches, cfg.d_model))
+        elif cfg.is_enc_dec:
+            out["frontend"] = 0.02 * jax.random.normal(
+                k2, (batch, cfg.n_frames, cfg.d_model))
+        yield out
+        step += 1

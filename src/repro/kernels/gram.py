@@ -1,0 +1,46 @@
+"""Tiled symmetric Gram accumulation X^T X (pl.pallas_call + BlockSpec).
+
+The PCA/SVD hot loop (DESIGN §2): MXU-aligned 128x128 output tiles, fp32
+accumulation over example chunks (grid dim 2 is the reduction — sequential
+on TPU, so the output tile accumulates in VMEM and spills once).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_F = 128
+TILE_N = 512
+
+
+def _kernel(xi_ref, xj_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xi = xi_ref[...].astype(jnp.float32)                  # (TN, TF)
+    xj = xj_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        xi, xj, (((0,), (0,)), ((), ())),                  # xi^T @ xj
+        preferred_element_type=jnp.float32)
+
+
+def gram_pallas(X, interpret: bool = True):
+    """X (n, F) with n % TILE_N == 0 and F % TILE_F == 0 -> (F, F) fp32."""
+    n, F = X.shape
+    assert n % TILE_N == 0 and F % TILE_F == 0, (n, F)
+    nf = F // TILE_F
+    return pl.pallas_call(
+        _kernel,
+        grid=(nf, nf, n // TILE_N),
+        in_specs=[
+            pl.BlockSpec((TILE_N, TILE_F), lambda i, j, k: (k, i)),
+            pl.BlockSpec((TILE_N, TILE_F), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_F, TILE_F), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((F, F), jnp.float32),
+        interpret=interpret,
+    )(X, X)

@@ -1,0 +1,51 @@
+"""Scatter-free histogram build: one-hot^T @ stats on the MXU
+(pl.pallas_call + BlockSpec).
+
+TPUs have no fast scatter-add; the decision-tree histogram
+h[(node,bin), c] += stat[i, c] becomes a matmul between an on-the-fly
+one-hot matrix (chunk x node*bin) and the stat chunk (chunk x C) — the
+paper's MLlib tree aggregation re-thought for a systolic array (DESIGN §2).
+Grid dim 1 accumulates over example chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 512
+
+
+def _kernel(n_slots: int, ids_ref, stat_ref, o_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]                                     # (TN, 1) int32
+    stat = stat_ref[...].astype(jnp.float32)               # (TN, C)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], n_slots), 1)
+    onehot = (slots == ids).astype(jnp.float32)            # (TN, S*B)
+    o_ref[...] += jax.lax.dot_general(
+        onehot, stat, (((0,), (0,)), ((), ())),            # onehot^T @ stat
+        preferred_element_type=jnp.float32)
+
+
+def hist_pallas(ids, stat, n_slots: int, interpret: bool = True):
+    """ids (n,1) int32 in [0, n_slots); stat (n, C) -> (n_slots, C) fp32."""
+    n, C = stat.shape
+    assert n % TILE_N == 0, n
+    return pl.pallas_call(
+        functools.partial(_kernel, n_slots),
+        grid=(n // TILE_N,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, 1), lambda k: (k, 0)),
+            pl.BlockSpec((TILE_N, C), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_slots, C), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_slots, C), jnp.float32),
+        interpret=interpret,
+    )(ids, stat)

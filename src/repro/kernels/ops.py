@@ -1,0 +1,106 @@
+"""jit'd public wrappers for the Pallas kernels (the ``ops.py`` contract).
+
+Dispatch: on TPU the compiled kernels run natively; on CPU the default is
+the jnp oracle (fast), with ``REPRO_KERNELS=interpret`` forcing the Pallas
+kernel bodies through the interpreter (how the test suite validates them).
+Wrappers own all shape padding/alignment so callers never see tile math.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.band_stats import TILE_N as BS_TILE, band_stats_pallas
+from repro.kernels.gram import TILE_F, TILE_N as G_TILE, gram_pallas
+from repro.kernels.hist import TILE_N as H_TILE, hist_pallas
+from repro.kernels.swa_attention import BLOCK_Q, swa_attention_pallas
+
+band_stats_ref = ref.band_stats_ref
+gram_ref = ref.gram_ref
+hist_ref = ref.hist_ref
+swa_attention_ref = ref.swa_attention_ref
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env != "auto":
+        return env                       # ref | interpret | tpu
+    return "tpu" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad_to(x, axis: int, multiple: int, mode: str = "constant"):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x, x.shape[axis]
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, mode=("edge" if mode == "edge" else "constant")), \
+        x.shape[axis]
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def band_stats(xs_sorted, force: str = ""):
+    """xs_sorted (N, BANDS, T) sorted ascending -> (N, BANDS, 15)."""
+    mode = force or _mode()
+    if mode == "ref":
+        return band_stats_ref(xs_sorted)
+    xp, true_t = _pad_to(xs_sorted, 2, 128, mode="edge")   # keep sortedness
+    xp, true_n = _pad_to(xp, 0, BS_TILE)
+    out = band_stats_pallas(xp, true_t, interpret=(mode != "tpu"))
+    return out[:true_n, :, :15]
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def gram(X, force: str = ""):
+    """X (n, F) -> X^T X (F, F) fp32."""
+    mode = force or _mode()
+    if mode == "ref":
+        return gram_ref(X)
+    Xp, F = _pad_to(X.astype(jnp.float32), 1, TILE_F)
+    Xp, _n = _pad_to(Xp, 0, G_TILE)                        # zero rows: no-op
+    out = gram_pallas(Xp, interpret=(mode != "tpu"))
+    return out[:F, :F]
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "force"))
+def hist(bins, node, stat, n_nodes: int, n_bins: int, force: str = ""):
+    """Histogram (n_nodes, n_bins, C) of per-example stats (one feature)."""
+    mode = force or _mode()
+    if mode == "ref":
+        return hist_ref(bins, node, stat, n_nodes, n_bins)
+    ids = (node * n_bins + bins).astype(jnp.int32)[:, None]
+    idp, _ = _pad_to(ids, 0, H_TILE)
+    # padded ids point at slot 0 with zero stat rows -> no contribution
+    statp, _ = _pad_to(stat, 0, H_TILE)
+    out = hist_pallas(idp, statp, n_nodes * n_bins,
+                      interpret=(mode != "tpu"))
+    return out.reshape(n_nodes, n_bins, stat.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "force"))
+def swa_attention(q, k, v, window: int = 0, causal: bool = True,
+                  force: str = ""):
+    """q,k,v (B,S,H,D) per-head layout -> (B,S,H,D)."""
+    mode = force or _mode()
+    if mode == "ref":
+        return swa_attention_ref(q, k, v, window, causal)
+    B, S, H, D = q.shape
+    if not causal:
+        assert S % BLOCK_Q == 0, "non-causal path requires aligned S"
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    qp, true_s = _pad_to(qf, 1, BLOCK_Q)
+    kp, _ = _pad_to(kf, 1, BLOCK_Q)
+    vp, _ = _pad_to(vf, 1, BLOCK_Q)
+    dp_q, true_d = _pad_to(qp, 2, 128)
+    dp_k, _ = _pad_to(kp, 2, 128)
+    dp_v, _ = _pad_to(vp, 2, 128)
+    out = swa_attention_pallas(dp_q, dp_k, dp_v, window=window,
+                               causal=causal, interpret=(mode != "tpu"),
+                               scale=D ** -0.5)
+    out = out[:, :true_s, :true_d]
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

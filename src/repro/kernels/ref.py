@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth the kernels/tests assert against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+# ------------------------------------------------------------- band_stats
+def band_stats_ref(xs):
+    """xs: (..., T) SORTED ascending.  Returns (..., 15) statistics
+    (see data/features.py for the catalogue)."""
+    T = xs.shape[-1]
+    mean = xs.mean(-1)
+    hmean = 1.0 / jnp.maximum(jnp.mean(1.0 / (jnp.abs(xs) + 1e-3), -1), EPS)
+    i25, i50, i75 = (25 * (T - 1)) // 100, (T - 1) // 2, (75 * (T - 1)) // 100
+    q25 = xs[..., i25]
+    med = xs[..., i50]
+    q75 = xs[..., i75]
+    iqr = q75 - q25
+    # trimmed mean: mean over the central [q25, q75] positions (sorted input
+    # makes this a static index range)
+    inner = xs[..., i25:i75 + 1]
+    tmean = inner.mean(-1)
+    energy = jnp.sum(xs * xs, -1)
+    p = (xs * xs) / jnp.maximum(energy[..., None], EPS)
+    entropy = -jnp.sum(p * jnp.log(p + EPS), -1)
+    mn = xs[..., 0]
+    mx = xs[..., -1]
+    var = jnp.maximum(jnp.mean(xs * xs, -1) - mean * mean, 0.0)
+    std = jnp.sqrt(var)
+    c = xs - mean[..., None]
+    m3 = jnp.mean(c ** 3, -1)
+    m4 = jnp.mean(c ** 4, -1)
+    skew = m3 / jnp.maximum(std ** 3, EPS)
+    kurt = m4 / jnp.maximum(var ** 2, EPS)
+    return jnp.stack([mean, hmean, tmean, energy, entropy, mn, med, mx,
+                      std, skew, q25, q75, iqr, jnp.abs(skew), kurt], axis=-1)
+
+
+# ------------------------------------------------------------------- gram
+def gram_ref(X):
+    """X (n, F) -> X^T X in fp32."""
+    Xf = X.astype(jnp.float32)
+    return Xf.T @ Xf
+
+
+# ------------------------------------------------------------------- hist
+def hist_ref(bins, node, stat, n_nodes: int, n_bins: int):
+    """Histogram h[s, b, :] = sum_i 1[node_i=s, bins_i=b] stat_i  (one
+    feature column).  bins: (n,) int32; node: (n,) int32; stat: (n, C).
+    Returns (n_nodes, n_bins, C) fp32."""
+    ids = node * n_bins + bins
+    return jax.ops.segment_sum(
+        stat.astype(jnp.float32), ids, num_segments=n_nodes * n_bins
+    ).reshape(n_nodes, n_bins, stat.shape[-1])
+
+
+# --------------------------------------------------------- swa_attention
+def swa_attention_ref(q, k, v, window: int, causal: bool = True):
+    """Sliding-window attention oracle.  q: (B,S,H,D); k,v: (B,S,H,D)
+    (per-head layout, kv already expanded to H heads).  fp32 softmax."""
+    B, S, H, D = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * (D ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos if causal else jnp.ones((S, S), bool)
+    if window:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", a.astype(v.dtype), v)

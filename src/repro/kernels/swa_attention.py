@@ -1,0 +1,106 @@
+"""Sliding-window flash attention (pl.pallas_call + BlockSpec).
+
+Online-softmax attention over a banded causal mask — the kernel that makes
+``long_500k`` viable for the dense/MoE/VLM/audio architectures (DESIGN §5)
+and the prefill hot path.  Grid: (batch*heads, q_blocks, k_blocks) with the
+k dimension innermost (sequential on TPU): VMEM scratch carries the running
+max / denominator / output accumulator across k blocks; out-of-band blocks
+are skipped via @pl.when (they cost a predicate, not FLOPs).
+
+Layout: q,k,v (B*H, S, D) — heads pre-flattened, kv pre-expanded to query
+heads (GQA expansion happens in the wrapper; D and block sizes are
+128-aligned for the MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _kernel(window: int, causal: bool, scale: float,
+            q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qi * BLOCK_Q
+    k_lo = ki * BLOCK_K
+    # block is live iff some (qpos >= kpos) and (kpos > qpos - window)
+    live = True
+    if causal:
+        live = k_lo <= q_lo + BLOCK_Q - 1
+    if window:
+        live = jnp.logical_and(live, k_lo + BLOCK_K - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                   # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)                   # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # (BQ, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def swa_attention_pallas(q, k, v, *, window: int = 0, causal: bool = True,
+                         interpret: bool = True, scale: float = 0.0):
+    """q,k,v: (BH, S, D); returns (BH, S, D).  S % 128 == 0, D % 128 == 0.
+    ``scale``: softmax scale (pass the UNpadded D^-0.5 when D was padded)."""
+    BH, S, D = q.shape
+    assert S % BLOCK_Q == 0 and S % BLOCK_K == 0, S
+    scale = scale or D ** -0.5
+    grid = (BH, S // BLOCK_Q, S // BLOCK_K)
+    return pl.pallas_call(
+        functools.partial(_kernel, window, causal, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

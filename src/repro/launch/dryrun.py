@@ -1,0 +1,173 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+MUST be the process entrypoint: the first two lines force 512 host devices
+before jax initializes (dry-run only — tests/benches see 1 device).
+
+Per combo we record:
+  * compile success, bytes-per-device (memory_analysis)
+  * HLO flops / bytes (cost_analysis)
+  * collective bytes by op kind, parsed from the compiled HLO — ops inside
+    while-loop bodies (the layer scan) are multiplied by the scan trip count
+    (XLA's cost model counts loop bodies once; see EXPERIMENTS.md §Dry-run).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] --out dryrun.jsonl
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES_BY_NAME, get_config          # noqa: E402
+from repro.configs.shapes import SHAPES                                  # noqa: E402
+from repro.launch import inputs as inputs_lib                            # noqa: E402
+from repro.launch.mesh import make_production_mesh                       # noqa: E402
+from repro.models.transformer import block_period                        # noqa: E402
+from repro.sharding import specs as specs_lib                            # noqa: E402
+from repro.sharding.axes import axes_from_mesh                           # noqa: E402
+from repro.train.loop import (TrainConfig, make_prefill, make_serve_step,  # noqa: E402
+                              make_train_step)
+
+from repro.launch.hloparse import collective_bytes, tpu_faithful_total    # noqa: E402
+from repro.launch.flops import (roofline_terms, step_flops,               # noqa: E402
+                                step_hbm_bytes)
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool, fsdp=None):
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = axes_from_mesh(mesh)
+    if fsdp is None:
+        fsdp = (specs_lib.auto_fsdp(cfg, mesh, axes) if shape.kind == "train"
+                else specs_lib.auto_fsdp_serving(cfg, mesh, axes))
+
+    # dense/full-attention archs switch to sliding-window for long_500k
+    if shape.name == "long_500k" and not cfg.sliding_window:
+        has_recurrent = any(k in ("mamba", "mlstm", "slstm")
+                            for k, _ in cfg.layer_pattern())
+        if not has_recurrent or any(k == "attn" for k, _ in cfg.layer_pattern()):
+            cfg = cfg.replace(sliding_window=8192)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            tc = TrainConfig()
+            step, sspecs, bspecs, _ctx = make_train_step(
+                cfg, mesh, tc, shape, fsdp=fsdp)
+            state = inputs_lib.state_struct(cfg, mesh, fsdp, tc)
+            batch = inputs_lib.batch_struct(cfg, shape, mesh)
+            lowered = step.lower(state, batch)
+        elif shape.kind == "prefill":
+            pf, *_ = make_prefill(cfg, mesh, shape, fsdp=fsdp)
+            params = inputs_lib.params_struct(cfg, mesh, fsdp)
+            batch = inputs_lib.batch_struct(cfg, shape, mesh)
+            lowered = pf.lower(params, batch)
+        else:
+            st, *_ = make_serve_step(cfg, mesh, shape, fsdp=fsdp)
+            params = inputs_lib.params_struct(cfg, mesh, fsdp)
+            token, cache, pos = inputs_lib.decode_structs(cfg, shape, mesh)
+            lowered = st.lower(params, token, cache, pos)
+    return cfg, shape, mesh, lowered, fsdp
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool, verbose=True):
+    t0 = time.time()
+    cfg, shape, mesh, lowered, fsdp = lower_combo(arch, shape_name, multi_pod)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    nper = cfg.n_layers // block_period(cfg)
+    hlo = compiled.as_text()
+    coll, counts = collective_bytes(hlo)
+    ndev = mesh.devices.size
+    axes = axes_from_mesh(mesh)
+    fl = step_flops(cfg, SHAPES_BY_NAME[shape_name])
+    hb = step_hbm_bytes(cfg, SHAPES_BY_NAME[shape_name], mesh, axes, fsdp)
+    coll_dev = tpu_faithful_total(coll)  # per-device (SPMD module), bf16-corrected
+    rt = roofline_terms(fl["total"], hb["total"], coll_dev, ndev)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "fsdp": bool(fsdp),
+        "kind": shape.kind,
+        "ok": True,
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "n_devices": ndev,
+        "scan_trips": nper,
+        "argument_bytes_per_dev": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes_per_dev": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes_per_dev": getattr(mem, "temp_size_in_bytes", 0),
+        "hlo_flops_raw": ca.get("flops", 0.0),
+        "hlo_bytes_raw": ca.get("bytes accessed", 0.0),
+        "collective_bytes": coll,
+        "collective_counts": counts,
+        "analytic_flops_global": fl["total"],
+        "model_flops": fl["model_flops"],
+        "analytic_hbm_bytes_dev": hb["total"],
+        "hbm_breakdown": {k: v for k, v in hb.items() if k != "total"},
+        "collective_bytes_dev": coll_dev,
+        "roofline": rt,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    if verbose:
+        print(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                combos.append((a, s.name))
+    else:
+        combos.append((args.arch, args.shape))
+
+    recs = []
+    for a, s in combos:
+        try:
+            recs.append(run_combo(a, s, args.multi_pod, verbose=not args.out))
+            status = "OK"
+        except Exception as e:  # noqa: BLE001 — record failures, keep going
+            recs.append({"arch": a, "shape": s,
+                         "mesh": "2x16x16" if args.multi_pod else "16x16",
+                         "ok": False, "error": repr(e)[:500]})
+            status = f"FAIL {type(e).__name__}"
+        print(f"[dryrun] {a} x {s} ({'2x16x16' if args.multi_pod else '16x16'}): {status}",
+              file=sys.stderr, flush=True)
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in recs:
+                f.write(json.dumps(r) + "\n")
+    if not all(r["ok"] for r in recs):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,226 @@
+"""Analytic FLOP / HBM-byte models per (arch x shape).
+
+XLA's cost_analysis counts while bodies once (empirically verified), so the
+compiled numbers undercount scanned layers by ~n_layers.  The roofline table
+therefore uses this analytic model as the primary source, with the raw HLO
+numbers reported as a cross-check (and validated against *unrolled* lowerings
+for the hillclimb combos — EXPERIMENTS.md §Roofline).
+
+Conventions:
+  * matmul (m,k)x(k,n): 2mkn FLOPs.
+  * train step = fwd + backward (2x) + remat re-forward (1x) on scanned
+    layers = 4x layer fwd; embedding/logits 3x (not rematted).
+  * MODEL_FLOPS = 6 * N * D (dense) or 6 * N_active * D (MoE) — the
+    conventional "useful" count (no attention/remat), for the usefulness
+    ratio.
+  * bytes: per-device HBM traffic estimate — params (x reads per step),
+    optimizer moments r/w, activation carries r/w, KV cache r/w.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.attention import padded_heads
+from repro.models.moe import padded_experts
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+def _block_fwd_flops_per_token(cfg: ModelConfig, kind: str, moe: bool,
+                               ctx_len: float) -> float:
+    """Forward FLOPs per token for one layer; ctx_len = avg attended length."""
+    d = cfg.d_model
+    hd = cfg.hd
+    nhp, _ = padded_heads(cfg)
+    nkv = cfg.n_kv_heads
+    f = 0.0
+    if kind == "attn":
+        f += 2 * d * hd * (2 * nhp + 2 * nkv)          # q,k,v,o projections
+        f += 2 * 2 * nhp * hd * ctx_len                # scores + AV
+        if cfg.is_enc_dec:
+            f += 2 * d * hd * (2 * nhp + 2 * nkv)      # cross-attn proj
+            f += 2 * 2 * nhp * hd * cfg.n_frames
+    elif kind == "mamba":
+        di = cfg.ssm_expand * d
+        N = cfg.ssm_d_state
+        R = max(1, di // 16)
+        f += 2 * d * 2 * di + 2 * cfg.ssm_d_conv * di
+        f += 2 * di * (R + 2 * N) + 2 * R * di
+        f += 10 * di * N                               # scan update+readout
+        f += 2 * di * d
+    elif kind == "mlstm":
+        di = cfg.ssm_expand * d
+        nh = cfg.n_heads
+        hdm = di // nh
+        f += 2 * d * 2 * di                            # up x/z
+        f += 3 * 2 * di * hdm                          # blockdiag qkv
+        f += 3 * 2 * nh * hdm * hdm                    # C update + readout
+        f += 2 * di * d                                # down
+    elif kind == "slstm":
+        nh = max(cfg.n_heads, 1)
+        f += 2 * d * 4 * d + 2 * 4 * d * (d // nh)
+    # FFN
+    if moe:
+        fe = cfg.expert_ff
+        mult = 3 if cfg.activation == "swiglu" else 2
+        f += (cfg.top_k + cfg.n_shared_experts) * mult * 2 * d * fe
+        f += 2 * d * padded_experts(cfg.n_experts)     # router
+    elif cfg.d_ff:
+        mult = 3 if cfg.activation == "swiglu" else 2
+        f += mult * 2 * d * cfg.d_ff
+    return f
+
+
+def step_flops(cfg: ModelConfig, shape: InputShape) -> Dict[str, float]:
+    """Global FLOPs for one step of the given kind."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind == "decode":
+        tokens = float(B)                # one new token per sequence
+        W = cfg.sliding_window or S
+        ctx = float(min(W, S))
+    else:
+        tokens = float(B) * S
+        window = cfg.sliding_window
+        ctx = (S + 1) / 2 if not window else min(window, (S + 1) / 2)
+
+    layer_fwd = sum(
+        _block_fwd_flops_per_token(cfg, kind, moe, ctx) * tokens
+        for kind, moe in cfg.layer_pattern())
+    logits = 2 * d * cfg.vocab_size * tokens
+    enc = 0.0
+    if cfg.is_enc_dec:
+        enc_tokens = float(B) * cfg.n_frames
+        per = (2 * d * cfg.hd * (2 * padded_heads(cfg)[0] + 2 * cfg.n_kv_heads)
+               + 2 * 2 * padded_heads(cfg)[0] * cfg.hd * cfg.n_frames
+               + (3 if cfg.activation == "swiglu" else 2) * 2 * d * cfg.d_ff)
+        enc = per * enc_tokens * cfg.n_enc_layers
+        if shape.kind == "decode":
+            enc = 0.0                    # encoder ran at prefill
+
+    if shape.kind == "train":
+        total = 4 * (layer_fwd + enc) + 3 * logits
+    else:
+        total = layer_fwd + enc + logits
+        if shape.kind == "prefill":
+            total = layer_fwd + enc + 2 * d * cfg.vocab_size * B  # last-tok logits
+
+    model_flops = 6.0 * cfg.active_param_count() * tokens
+    if shape.kind != "train":
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+    return {"total": total, "layer_fwd": layer_fwd, "logits": logits,
+            "enc": enc, "model_flops": model_flops, "tokens": tokens}
+
+
+def per_device_state_bytes(cfg: ModelConfig, mesh, axes, fsdp: bool,
+                           train: bool, moment_bytes: int = 8) -> float:
+    """Exact per-device bytes of params (+ optimizer if train) from specs."""
+    import jax
+    import numpy as np
+    from repro.launch import inputs as inputs_lib
+    from repro.sharding import specs as specs_lib
+
+    struct = inputs_lib.params_struct(cfg, None, fsdp)
+    specs = specs_lib.build(cfg, mesh, axes, fsdp).param_specs()
+
+    def ways(spec, shape):
+        w = 1
+        for ax, dim in zip(tuple(spec) + (None,) * (len(shape) - len(tuple(spec))),
+                           shape):
+            if ax is None:
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            for a in axs:
+                w *= mesh.shape[a]
+        return w
+
+    total = 0.0
+    leaves = jax.tree.leaves(struct, is_leaf=lambda x: hasattr(x, "shape"))
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: hasattr(x, "index") and not isinstance(x, dict))
+    # walk jointly via flatten with paths to stay aligned
+    sl = jax.tree_util.tree_flatten_with_path(struct)[0]
+    pl = dict(jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: type(x).__name__ == "PartitionSpec")[0])
+    for path, leaf in sl:
+        spec = pl[path]
+        n = float(np.prod(leaf.shape)) / ways(spec, leaf.shape)
+        pb = leaf.dtype.itemsize
+        total += n * (pb + (moment_bytes if train else 0))
+    return total
+
+
+def step_hbm_bytes(cfg: ModelConfig, shape: InputShape, mesh, axes,
+                   fsdp: bool) -> Dict[str, float]:
+    """Per-device HBM traffic estimate for one step (documented formulas).
+
+    train:   weights read fwd + remat re-read + bwd read + write, moments r/w,
+             grads r/w (fp32), activation carries write + 2 reads.
+    prefill: weights read, cache write, activation stream r/w.
+    decode:  weights read, cache read + slot write.
+    """
+    import numpy as np
+    from repro.models.kvcache import cache_layout
+    from repro.models.transformer import block_period
+    from repro.sharding import specs as specs_lib
+
+    d_ways, m_ways = 1, mesh.shape[axes.model]
+    for a in axes.data:
+        d_ways *= mesh.shape[a]
+    n_dev = d_ways * m_ways
+
+    pdev = per_device_state_bytes(cfg, mesh, axes, fsdp, train=False,
+                                  moment_bytes=0)
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    nper = cfg.n_layers // block_period(cfg)
+    bl = max(B // d_ways, 1)
+
+    if shape.kind == "train":
+        act_carries = cfg.n_layers * bl * S * d * 2.0       # bf16 layer inputs
+        moments = per_device_state_bytes(cfg, mesh, axes, fsdp, train=True,
+                                         moment_bytes=8) - pdev
+        grads = pdev * 2                                     # fp32 vs bf16
+        total = pdev * 4 + moments * 2 + grads * 2 + act_carries * 3
+        return {"total": total, "params": pdev, "moments": moments,
+                "act_carries": act_carries}
+
+    # serving: cache bytes per device from the cache specs
+    sb = specs_lib.build(cfg, mesh, axes, fsdp)
+    cspecs = sb.cache_specs(shape)
+    lay = cache_layout(cfg, B, S)
+    cache_dev = 0.0
+    for pj, sub in lay.items():
+        for k, (shp, dt) in sub.items():
+            spec = cspecs[pj][k]
+            w = 1
+            for ax, dim in zip(tuple(spec) + (None,) * (len(shp) - len(tuple(spec))), shp):
+                if ax is None:
+                    continue
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    w *= mesh.shape[a]
+            cache_dev += float(np.prod(shp)) * np.dtype(dt).itemsize / w
+    if shape.kind == "decode":
+        total = pdev + cache_dev            # read weights + read cache (+eps)
+    else:
+        acts = bl * S * d * 2.0 * cfg.n_layers * 2
+        total = pdev + cache_dev + acts
+    return {"total": total, "params": pdev, "cache": cache_dev}
+
+
+def roofline_terms(flops_global: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, n_devices: int,
+                   ici_links: int = 4) -> Dict[str, float]:
+    t_compute = flops_global / n_devices / PEAK_FLOPS
+    t_memory = bytes_per_dev / HBM_BW
+    t_coll = coll_bytes_per_dev / (ici_links * ICI_BW)
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    return {"compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dom[0]}

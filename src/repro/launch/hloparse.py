@@ -1,0 +1,165 @@
+"""Post-optimization HLO analysis: collective bytes with loop multipliers.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically); the same holds for any byte counting over the HLO text.  This
+parser recovers true totals:
+
+1. split the module into computations,
+2. find every ``while`` op, its body computation, and its
+   ``backend_config={"known_trip_count":{"n":K}}``,
+3. propagate multipliers through (possibly nested) loops,
+4. sum collective output bytes x multiplier per collective kind.
+
+Output bytes are used as the traffic proxy per op (all-reduce: |msg|,
+all-gather: gathered size, reduce-scatter: pre-reduce input ~ output x ways;
+a uniform, documented convention — see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+                "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{")
+_WHILE_RE = re.compile(r"while\(.*?body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(stext: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(stext):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = None
+    for line in hlo.splitlines():
+        # computation headers sit at column 0: "[ENTRY ]%name (params) -> ty {"
+        if (line and not line[0].isspace() and "->" in line
+                and line.rstrip().endswith("{")):
+            name = line.strip()
+            is_entry = name.startswith("ENTRY")
+            if is_entry:
+                name = name[len("ENTRY"):].strip()
+            name = name.lstrip("%").split("(")[0].strip().split()[0]
+            cur = name
+            comps[cur] = []
+            if is_entry:
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    if entry is not None:
+        comps["__entry__"] = comps.get(entry, [])
+        comps.setdefault("__entry_name__", [entry])  # marker
+    return comps
+
+
+def loop_multipliers(hlo: str) -> Dict[str, int]:
+    """computation name -> effective execution count (entry = 1)."""
+    comps = _split_computations(hlo)
+    entry_name = comps.get("__entry_name__", [None])[0]
+    # call sites: (parent_comp, body_comp, trip)
+    sites: List[Tuple[str, str, int]] = []
+    for cname, lines in comps.items():
+        if cname.startswith("__entry"):
+            continue
+        for ln in lines:
+            if " while(" not in ln:
+                continue
+            wm = _WHILE_RE.search(ln)
+            if not wm:
+                continue
+            tm = _TRIP_RE.search(ln)
+            trip = int(tm.group(1)) if tm else 1
+            sites.append((cname, wm.group(1), trip))
+    mult: Dict[str, int] = defaultdict(int)
+    if entry_name:
+        mult[entry_name] = 1
+    # fixpoint over the (acyclic) call graph
+    for _ in range(64):
+        changed = False
+        new = defaultdict(int)
+        if entry_name:
+            new[entry_name] = 1
+        for parent, body, trip in sites:
+            if mult.get(parent, 0):
+                new[body] += mult[parent] * trip
+        for k, v in new.items():
+            if mult.get(k, 0) != v:
+                changed = True
+        if not changed:
+            break
+        mult = new
+    return dict(mult)
+
+
+_OPERAND_RE = re.compile(r"\((%[\w.\-]+)")
+
+
+def collective_bytes(hlo: str) -> Tuple[Dict[str, float], Dict[str, int]]:
+    """(bytes by kind, op-executions by kind), loop-aware.
+
+    Also emits ``<kind>_tpu`` entries for the reducing collectives: the CPU
+    backend's FloatNormalization pass promotes bf16 all-reduce /
+    reduce-scatter to fp32 (verified with a minimal repro: a pure bf16 psum
+    lowers to ``all-reduce(f32(convert(...)))`` on CPU).  Ops whose operand
+    is a convert fusion are counted at half size in the ``_tpu`` entry —
+    the TPU-faithful byte count the roofline uses (EXPERIMENTS.md §Roofline).
+    """
+    comps = _split_computations(hlo)
+    mult = loop_multipliers(hlo)
+    out = {k: 0.0 for k in COLLECTIVES}
+    out.update({f"{k}_tpu": 0.0 for k in ("all-reduce", "reduce-scatter")})
+    counts = {k: 0 for k in COLLECTIVES}
+    for cname, lines in comps.items():
+        if cname.startswith("__entry"):
+            continue
+        # collectives live in the entry or in while bodies; computations we
+        # couldn't attribute (fusions/conds — which hold no collectives)
+        # default to counting once.
+        m = mult.get(cname, 1)
+        for ln in lines:
+            for kind in COLLECTIVES:
+                # match "= <shape> all-reduce(" and "-start(" variants
+                if f" {kind}(" in ln or f" {kind}-start(" in ln:
+                    lhs = ln.split("=", 1)[1].strip() if "=" in ln else ln
+                    b = shape_bytes(lhs.split(f" {kind}")[0])
+                    out[kind] += float(b) * m
+                    counts[kind] += m
+                    if kind in ("all-reduce", "reduce-scatter"):
+                        om = _OPERAND_RE.search(ln.split(kind, 1)[1])
+                        promoted = bool(om and "convert" in om.group(1))
+                        out[f"{kind}_tpu"] += float(b) * m * (0.5 if promoted else 1.0)
+    return out, counts
+
+
+def tpu_faithful_total(coll: Dict[str, float]) -> float:
+    """Per-device collective bytes with the CPU bf16-promotion undone."""
+    total = 0.0
+    for k in COLLECTIVES:
+        total += coll.get(f"{k}_tpu", coll.get(k, 0.0))
+    return total

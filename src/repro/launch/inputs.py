@@ -1,0 +1,110 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape, mesh)`` returns the exact kwargs the corresponding
+step function is lowered with.  Frontends (VLM patches, audio frames) are
+stubbed as precomputed embeddings per the carve-out (DESIGN §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.kvcache import cache_layout
+from repro.sharding import specs as specs_lib
+from repro.sharding.axes import axes_from_mesh
+
+
+def _sds(shape, dtype, mesh, spec):
+    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def token_counts(cfg: ModelConfig, shape: InputShape):
+    """(text_tokens, frontend_len) for a train/prefill sequence."""
+    if cfg.n_patches:
+        return shape.seq_len - cfg.n_patches, cfg.n_patches
+    if cfg.is_enc_dec:
+        return shape.seq_len, cfg.n_frames
+    return shape.seq_len, 0
+
+
+def batch_struct(cfg: ModelConfig, shape: InputShape, mesh: Optional[Mesh]
+                 ) -> Dict[str, Any]:
+    """Train/prefill batch: tokens, labels (train only adds labels), frontend."""
+    axes = axes_from_mesh(mesh) if mesh is not None else None
+    if mesh is not None:
+        sb = specs_lib.build(cfg, mesh, axes, fsdp=False)
+        bax = sb.batch_spec(shape.global_batch)
+    else:
+        bax = None
+    B = shape.global_batch
+    S_text, F = token_counts(cfg, shape)
+    out = {"tokens": _sds((B, S_text), jnp.int32, mesh, P(bax, None))}
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S_text), jnp.int32, mesh, P(bax, None))
+    if F and cfg.n_patches:
+        out["frontend"] = _sds((B, F, cfg.d_model), jnp.float32, mesh,
+                               P(bax, None, None))
+    elif F:
+        out["frontend"] = _sds((B, F, cfg.d_model), jnp.float32, mesh,
+                               P(bax, None, None))
+    return out
+
+
+def decode_structs(cfg: ModelConfig, shape: InputShape, mesh: Optional[Mesh]):
+    """(token, cache, pos) structs for serve_step."""
+    B = shape.global_batch
+    axes = axes_from_mesh(mesh) if mesh is not None else None
+    if mesh is not None:
+        sb = specs_lib.build(cfg, mesh, axes, fsdp=False)
+        bax = sb.batch_spec(B)
+        cspecs = specs_lib.build(cfg, mesh, axes, fsdp=False).cache_specs(shape)
+    else:
+        bax, cspecs = None, None
+    token = _sds((B, 1), jnp.int32, mesh, P(bax, None))
+    lay = cache_layout(cfg, B, shape.seq_len)
+    cache = {}
+    for pj, sub in lay.items():
+        cache[pj] = {}
+        for k, (s, dt) in sub.items():
+            spec = cspecs[pj][k] if cspecs is not None else P()
+            cache[pj][k] = _sds(s, dt, mesh, spec)
+    pos = _sds((), jnp.int32, mesh, P())
+    return token, cache, pos
+
+
+def params_struct(cfg: ModelConfig, mesh: Optional[Mesh], fsdp: bool):
+    """ShapeDtypeStructs for params via eval_shape (no allocation)."""
+    from repro.models import transformer as tf
+    shapes = jax.eval_shape(
+        lambda k: tf.init_params(k, cfg), jax.random.PRNGKey(0))
+    if mesh is None:
+        return shapes
+    axes = axes_from_mesh(mesh)
+    specs = specs_lib.build(cfg, mesh, axes, fsdp).param_specs()
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def state_struct(cfg: ModelConfig, mesh, fsdp: bool, tc):
+    from repro.train.loop import init_state, state_specs
+    shapes = jax.eval_shape(
+        lambda k: init_state(k, cfg, tc), jax.random.PRNGKey(0))
+    if mesh is None:
+        return shapes
+    axes = axes_from_mesh(mesh)
+    specs = state_specs(cfg, mesh, axes, fsdp,
+                        zero1=getattr(tc, "zero1", False))
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,108 @@
+"""Preflight checker: validate (arch x shape x mesh) before committing to a
+compile — divisibility, memory napkin math, and sharding coverage.
+
+    PYTHONPATH=src python -m repro.launch.preflight [--arch a] [--multi-pod]
+
+Prints one line per check; exits non-zero on hard failures.  The dry-run
+proves compile-correctness; preflight explains *why* a config is laid out
+the way it is (which dims shard, what falls back to replication, projected
+per-chip state bytes) without any XLA work — the first thing an oncall
+would run.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Tuple
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.models.attention import padded_heads
+from repro.models.moe import padded_experts
+from repro.models.transformer import block_period
+
+
+def check_arch(cfg, data_ways: int, model_ways: int) -> Tuple[List[str], List[str]]:
+    ok, warn = [], []
+    nhp, G = padded_heads(cfg)
+    if nhp != cfg.n_heads:
+        warn.append(f"q-heads padded {cfg.n_heads}->{nhp} for TP{model_ways} "
+                    f"(+{100*(nhp-cfg.n_heads)/cfg.n_heads:.0f}% attn FLOPs)")
+    ok.append(f"attn heads: {nhp} = {cfg.n_kv_heads}kv x {G}G "
+              f"({'kv' if cfg.n_kv_heads % model_ways == 0 else 'flat-head'}-sharded)")
+    if cfg.n_kv_heads % model_ways:
+        warn.append(f"kv projections replicate over model axis "
+                    f"({cfg.n_kv_heads} kv heads !% {model_ways})")
+    if cfg.d_ff and cfg.d_ff % model_ways:
+        warn.append(f"d_ff={cfg.d_ff} !% {model_ways}: MLP replicates (BAD)")
+    else:
+        ok.append(f"d_ff {cfg.d_ff or '—'} TP-sharded")
+    if cfg.n_experts:
+        ep = padded_experts(cfg.n_experts)
+        if ep != cfg.n_experts:
+            warn.append(f"experts padded {cfg.n_experts}->{ep} "
+                        f"({ep - cfg.n_experts} dead experts)")
+        ok.append(f"experts: {ep} over model axis = {ep // model_ways}/chip")
+    p = block_period(cfg)
+    ok.append(f"scan: period {p} x {cfg.n_layers // p} trips")
+    # memory napkin (training, fp32 moments)
+    n = cfg.param_count()
+    state = n * 10 / (data_ways * model_ways)
+    if state > 12e9:
+        warn.append(f"train state {state/1e9:.1f}GB/chip with fp32 moments "
+                    f"(> ~12GB budget) — use bf16 moments "
+                    f"({n*6/(data_ways*model_ways)/1e9:.1f}GB)")
+    else:
+        ok.append(f"train state {state/1e9:.2f}GB/chip (fp32 moments)")
+    return ok, warn
+
+
+def check_shape(cfg, shape, data_ways: int, model_ways: int):
+    ok, warn, fail = [], [], []
+    if shape.kind == "train" and shape.global_batch % data_ways:
+        fail.append(f"batch {shape.global_batch} !% data {data_ways}")
+    if shape.kind == "decode":
+        W = cfg.sliding_window or shape.seq_len
+        if shape.global_batch == 1:
+            ways = data_ways * model_ways
+            if W % ways:
+                warn.append(f"cache seq {W} !% {ways}: partial seq-sharding")
+            else:
+                ok.append(f"cache seq-sharded {ways}-way ({W//ways}/chip)")
+        has_rec = any(k != "attn" for k, _ in cfg.layer_pattern())
+        if shape.seq_len >= 500_000 and not (has_rec or cfg.sliding_window):
+            warn.append("long_500k on full attention: runs via the "
+                        "sliding-window variant (window 8192)")
+    return ok, warn, fail
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    data_ways = 32 if args.multi_pod else 16
+    model_ways = 16
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    failures = 0
+    for a in archs:
+        cfg = get_config(a)
+        print(f"\n== {a} ({cfg.arch_type}, {cfg.param_count()/1e9:.2f}B) ==")
+        ok, warn = check_arch(cfg, data_ways, model_ways)
+        for m in ok:
+            print(f"  [ok]   {m}")
+        for m in warn:
+            print(f"  [warn] {m}")
+        for shape in SHAPES:
+            so, sw, sf = check_shape(cfg, shape, data_ways, model_ways)
+            for m in so:
+                print(f"  [ok]   {shape.name}: {m}")
+            for m in sw:
+                print(f"  [warn] {shape.name}: {m}")
+            for m in sf:
+                print(f"  [FAIL] {shape.name}: {m}")
+                failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch llama3.2-3b --smoke --batch 4 --prompt-len 64 --gen 32
+
+Implements the production serving split: one prefill program (chunked
+attention over the prompt, emits the KV cache) + one decode program (single
+token against the circular cache), both jitted once and reused.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.shapes import InputShape
+from repro.data.pipeline import token_stream
+from repro.models import transformer as tf
+from repro.sharding.axes import make_test_mesh
+from repro.train.loop import make_prefill, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_test_mesh()
+    # decode cache covers prompt + generation
+    total = args.prompt_len + args.gen
+    shape_pf = InputShape("pf", args.prompt_len, args.batch, "prefill")
+    shape_dec = InputShape("dec", total, args.batch, "decode")
+
+    key = jax.random.PRNGKey(args.seed)
+    with jax.set_mesh(mesh):
+        params = tf.init_params(key, cfg)
+        pf, *_ = make_prefill(cfg, mesh, shape_pf,
+                              q_chunk=min(512, args.prompt_len), fsdp=False)
+        dec, *_ = make_serve_step(cfg, mesh, shape_dec, fsdp=False,
+                                  donate=False)
+
+        batch = next(token_stream(cfg, args.batch, args.prompt_len, args.seed))
+        batch.pop("labels", None)
+        t0 = time.time()
+        logits, cache = pf(params, batch)
+        print(f"prefill: {args.batch}x{args.prompt_len} in {time.time()-t0:.2f}s")
+
+        # prefill cache is sized prompt_len; decode cache is sized total —
+        # re-seat the prefill entries into the larger circular buffer
+        from repro.models.kvcache import grow_cache
+        cache = grow_cache(cache, cfg, args.batch, total)
+
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out_tokens = [tok]
+        t0 = time.time()
+        for i in range(args.gen):
+            pos = jnp.int32(args.prompt_len + i)
+            logits, cache = dec(params, tok, cache, pos)
+            if args.temperature > 0:
+                key, sk = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sk, logits[:, 0] / args.temperature)[:, None].astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+            out_tokens.append(tok)
+        dt = time.time() - t0
+        gen = jnp.concatenate(out_tokens, axis=1)
+        print(f"decode: {args.gen} steps x batch {args.batch} in {dt:.2f}s "
+              f"({args.gen * args.batch / dt:.1f} tok/s)")
+        print("sampled token ids (seq 0):", gen[0].tolist())
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""End-to-end LM training driver.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch llama3.2-3b --smoke --steps 50 --batch 8 --seq 256
+
+``--smoke`` uses the reduced config (CPU-trainable ~100M-scale runs use
+``--smoke --d-model 512 ...`` overrides); full configs are for real
+hardware.  Checkpoints every ``--ckpt-every`` steps; resumes from the
+latest checkpoint in ``--ckpt-dir``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES_BY_NAME, get_config, get_smoke_config
+from repro.configs.shapes import InputShape
+from repro.data.pipeline import token_stream
+from repro.sharding.axes import make_test_mesh
+from repro.train import checkpoint as ckpt_lib
+from repro.train.loop import TrainConfig, init_state, make_train_step
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--n-layers", type=int, default=0)
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    over = {}
+    if args.d_model:
+        over.update(d_model=args.d_model)
+    if args.n_layers:
+        over.update(n_layers=args.n_layers)
+    if over:
+        cfg = cfg.replace(**over)
+
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    mesh = make_test_mesh(args.mesh_data, args.mesh_model)
+    tc = TrainConfig(opt=OptConfig(lr=args.lr, total_steps=args.steps,
+                                   warmup_steps=max(args.steps // 20, 5)),
+                     q_chunk=min(1024, args.seq), microbatches=1)
+
+    with jax.set_mesh(mesh):
+        step_fn, sspecs, _b, _ctx = make_train_step(cfg, mesh, tc, shape,
+                                                    fsdp=False, donate=True)
+        start = 0
+        if args.ckpt_dir and (s := ckpt_lib.latest_step(args.ckpt_dir)) is not None:
+            struct = jax.eval_shape(
+                lambda k: init_state(k, cfg, tc), jax.random.PRNGKey(args.seed))
+            state = ckpt_lib.restore(
+                os.path.join(args.ckpt_dir, f"step_{s}"), struct)
+            start = s
+            print(f"resumed from step {s}")
+        else:
+            state = init_state(jax.random.PRNGKey(args.seed), cfg, tc)
+        n_params = sum(int(x.size) for x in jax.tree.leaves(state["params"]))
+        print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+              f"mesh={dict(mesh.shape)} tokens/step={args.batch * args.seq}")
+
+        stream = token_stream(cfg, args.batch, args.seq, args.seed, start)
+        t0 = time.time()
+        for i, batch in zip(range(start, args.steps), stream):
+            state, metrics = step_fn(state, batch)
+            if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                dt = time.time() - t0
+                tps = args.log_every * args.batch * args.seq / max(dt, 1e-9)
+                print(f"step {i+1:5d} loss={m['loss']:.4f} ce={m['ce']:.4f} "
+                      f"gnorm={m['grad_norm']:.2f} lr={m['lr']:.2e} "
+                      f"tok/s={tps:,.0f}")
+                t0 = time.time()
+            if args.ckpt_every and args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                ckpt_lib.save(os.path.join(args.ckpt_dir, f"step_{i+1}"),
+                              state, step=i + 1)
+        if args.ckpt_dir:
+            ckpt_lib.save(os.path.join(args.ckpt_dir, f"step_{args.steps}"),
+                          state, step=args.steps)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

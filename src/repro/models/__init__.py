@@ -1,0 +1,10 @@
+from repro.models.transformer import (
+    Context,
+    block_period,
+    decode_step,
+    forward,
+    init_params,
+    prefill,
+    unembed,
+)
+from repro.models.kvcache import cache_layout, cache_struct, init_cache

@@ -1,0 +1,282 @@
+"""GQA attention: chunked-causal (train/prefill), cross, and cached decode.
+
+Layout conventions
+------------------
+Weights keep a FLAT query-head dim ``nh`` (padded so ``nh = n_kv * G``),
+which shards cleanly on the mesh ``model`` axis for every assigned arch
+(nh in {16, 32, 48, 64} — all divisible by 16); queries are reshaped to the
+grouped ``(n_kv, G)`` form only inside the attention math (DESIGN §5).
+
+  wq: (d, nh, hd)           q: (B, S, nh, hd) -> (B, S, n_kv, G, hd)
+  wk, wv: (d, n_kv, hd)     k, v: (B, S, n_kv, hd)   (= the KV cache entries)
+  wo: (nh, hd, d)
+
+llama3.2 pads 24 -> 32 q heads; padded head slices are zero in wq AND wo, so
+the computed function is exactly the unpadded model's.
+
+Memory: scores are never materialized for the full (S, S) square — queries
+are processed in chunks of ``q_chunk`` via ``lax.map``, keys stay whole and
+are masked (causal and/or sliding window).  Softmax in fp32.
+
+Decode uses a circular KV cache of ``W`` slots (W = seq_len for full
+attention, W = sliding_window for SWA); RoPE is applied to K at write time so
+cached keys carry their absolute positions.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import normal, rope
+
+NEG_INF = -1e30
+
+
+TP_WAYS = 16    # production mesh `model` axis size — head padding target
+
+
+def padded_heads(cfg: ModelConfig) -> Tuple[int, int]:
+    """(nh_padded, G) with nh_padded = n_kv * G.
+
+    G is bumped until nh_padded divides the production TP width, so the flat
+    head dim always shards 16 ways (llama3.2: 24 -> 32 heads; padded head
+    slices are zero in wq and wo, so the function is the unpadded model's).
+    Without the bump, attention weights would replicate across the model
+    axis and every shard would compute all heads — 16x redundant FLOPs.
+    """
+    G = -(-cfg.n_heads // cfg.n_kv_heads)
+    if cfg.n_heads > TP_WAYS:
+        while (cfg.n_kv_heads * G) % TP_WAYS:
+            G += 1
+    return cfg.n_kv_heads * G, G
+
+
+def init_attn(key, cfg: ModelConfig, d: int, cross: bool = False) -> dict:
+    nkv, hd = cfg.n_kv_heads, cfg.hd
+    nhp, G = padded_heads(cfg)
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    sc = d ** -0.5
+    wq = normal(ks[0], (d, nhp, hd), sc, dt)
+    wo = normal(ks[3], (nhp, hd, d), (nhp * hd) ** -0.5, dt)
+    if nhp != cfg.n_heads:
+        # Zero the padded tail heads.  Flat head n maps to kv group n // G, so
+        # the active 24 heads of llama3.2 spread 4-per-group over 6 kv groups
+        # (instead of 3-per-group over 8) — an isomorphic parameterization for
+        # from-scratch training; padded heads contribute exactly zero.
+        mask = (jnp.arange(nhp) < cfg.n_heads).astype(dt)
+        wq = wq * mask[None, :, None]
+        wo = wo * mask[:, None, None]
+    return {
+        "wq": wq,
+        "wk": normal(ks[1], (d, nkv, hd), sc, dt),
+        "wv": normal(ks[2], (d, nkv, hd), sc, dt),
+        "wo": wo,
+    }
+
+
+def _group(q, nkv: int):
+    """(B,S,nh,hd) -> (B,S,nkv,G,hd)."""
+    B, S, nh, hd = q.shape
+    return q.reshape(B, S, nkv, nh // nkv, hd)
+
+
+def _flat(o):
+    """(B,S,nkv,G,hd) -> (B,S,nh,hd)."""
+    B, S, nkv, G, hd = o.shape
+    return o.reshape(B, S, nkv * G, hd)
+
+
+def project_qkv(x, p, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if cfg.pos_embedding == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return _group(q, cfg.n_kv_heads), k, v
+
+
+def _attend_chunk(qc, k, v, qpos, kpos, *, causal: bool, window: int):
+    """qc: (B,C,nkv,G,hd); k,v: (B,S,nkv,hd); returns (B,C,nkv,G,hd)."""
+    hd = qc.shape[-1]
+    s = jnp.einsum("bckgh,bskh->bkgcs", qc, k).astype(jnp.float32) * (hd ** -0.5)
+    mask = None
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]                       # (C,S)
+    if window:
+        w = kpos[None, :] > (qpos[:, None] - window)
+        mask = w if mask is None else (mask & w)
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgcs,bskh->bckgh", a.astype(v.dtype), v)
+
+
+def attention(q, k, v, *, causal: bool, window: int = 0,
+              q_offset: int = 0, q_chunk: int = 1024) -> jnp.ndarray:
+    """Chunked attention.  q: (B,S,nkv,G,hd); k/v: (B,Sk,nkv,hd).
+    Returns flat (B,S,nh,hd)."""
+    B, S = q.shape[:2]
+    Sk = k.shape[1]
+    kpos = jnp.arange(Sk)
+    C = min(q_chunk, S)
+    if S % C:
+        C = S  # fall back to single chunk for odd sizes (smoke tests)
+    nc = S // C
+    if nc == 1:
+        qpos = q_offset + jnp.arange(S)
+        return _flat(_attend_chunk(q, k, v, qpos, kpos, causal=causal, window=window))
+    qr = q.reshape(B, nc, C, *q.shape[2:]).swapaxes(0, 1)           # (nc,B,C,...)
+
+    # remat each chunk: without this, the backward pass saves every chunk's
+    # fp32 softmax weights and broadcast masks simultaneously (~S^2 fp32 per
+    # layer — tens of GB at 4k x 64k tokens/device); with it, peak attention
+    # memory is ONE chunk's scores (flash-attention-style recompute).
+    @jax.checkpoint
+    def one(args):
+        i, qc = args
+        qpos = q_offset + i * C + jnp.arange(C)
+        return _attend_chunk(qc, k, v, qpos, kpos, causal=causal, window=window)
+
+    out = jax.lax.map(one, (jnp.arange(nc), qr))                    # (nc,B,C,...)
+    return _flat(out.swapaxes(0, 1).reshape(B, S, *q.shape[2:]))
+
+
+def attn_block(x, p, cfg: ModelConfig, positions, *, window: int = 0,
+               q_chunk: int = 1024):
+    """Self-attention over a full sequence (train / prefill).
+
+    Returns (out, (k, v)) — k/v are the cache entries (RoPE already applied).
+    """
+    q, k, v = project_qkv(x, p, cfg, positions)
+    o = attention(q, k, v, causal=True, window=window, q_chunk=q_chunk)
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"]), (k, v)
+
+
+def cross_attn_block(x, p, cfg: ModelConfig, enc_k, enc_v, *, q_chunk: int = 1024):
+    """Cross-attention: queries from decoder x, keys/values precomputed."""
+    q = _group(jnp.einsum("bsd,dnh->bsnh", x, p["wq"]), cfg.n_kv_heads)  # no RoPE
+    o = attention(q, enc_k, enc_v, causal=False, q_chunk=q_chunk)
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"])
+
+
+def project_enc_kv(enc_out, p):
+    k = jnp.einsum("bsd,dnh->bsnh", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", enc_out, p["wv"])
+    return k, v
+
+
+# -------------------------------------------------------------- int8 cache
+def quantize_kv(x):
+    """(val, scale): per-(pos, head) absmax int8 quantization.
+    x: (B,S,nkv,hd) -> (int8 same shape, bf16 (B,S,nkv,1))."""
+    scale = jnp.max(jnp.abs(x).astype(jnp.float32), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale, dtype):
+    return q.astype(jnp.float32).astype(dtype) * scale.astype(dtype)
+
+
+# ------------------------------------------------------------------- decode
+def _decode_positions(pos, B):
+    """Normalize decode position(s): scalar -> (B,), keeps (B,) as-is.
+    Per-slot positions enable continuous batching (requests at different
+    generation offsets share one decode program)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+    return pos
+
+
+def _cache_write(cache, val, slots):
+    """Per-batch circular write: cache (B,W,...), val (B,1,...), slots (B,)."""
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), slots].set(
+        val[:, 0].astype(cache.dtype))
+
+
+def decode_attn_block(x1, p, cfg: ModelConfig, cache_k, cache_v, pos, *,
+                      window_slots: int):
+    """One-token decode against a circular KV cache.
+
+    x1: (B,1,d); cache_k/v: (B,W,nkv,hd); pos: scalar int32 OR (B,) int32 —
+    absolute position of each sequence's new token (vector positions allow
+    continuous batching).  The new entry overwrites the oldest slot, keeping
+    exactly the last W positions — full attention is the W=seq_len case.
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    B = x1.shape[0]
+    posv = _decode_positions(pos, B)[:, None]               # (B,1)
+    q = jnp.einsum("bsd,dnh->bsnh", x1, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x1, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x1, p["wv"])
+    if cfg.pos_embedding == "rope":
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+    q = _group(q, cfg.n_kv_heads)
+    slots = jnp.mod(posv[:, 0], window_slots)               # (B,)
+    cache_k = _cache_write(cache_k, k, slots)
+    cache_v = _cache_write(cache_v, v, slots)
+    hd = q.shape[-1]
+    s = jnp.einsum("bckgh,bskh->bkgcs", q, cache_k).astype(jnp.float32) * (hd ** -0.5)
+    # validity: pos+1 tokens exist; before wraparound only slots <= pos are
+    # live (all slots are live once pos >= W, and arange(W) <= pos is then
+    # all-true, so one expression covers both phases)
+    valid = jnp.arange(window_slots)[None] <= posv          # (B,W)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgcs,bskh->bckgh", a.astype(cache_v.dtype), cache_v)
+    out = jnp.einsum("bsnh,nhd->bsd", _flat(o), p["wo"])
+    return out, cache_k, cache_v
+
+
+def decode_cross_attn_block(x1, p, enc_k, enc_v):
+    nkv = enc_k.shape[2]
+    q = _group(jnp.einsum("bsd,dnh->bsnh", x1, p["wq"]), nkv)
+    hd = q.shape[-1]
+    s = jnp.einsum("bckgh,bskh->bkgcs", q, enc_k).astype(jnp.float32) * (hd ** -0.5)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgcs,bskh->bckgh", a.astype(enc_v.dtype), enc_v)
+    return jnp.einsum("bsnh,nhd->bsd", _flat(o), p["wo"])
+
+
+def decode_attn_block_q(x1, p, cfg: ModelConfig, cache, pos, *,
+                        window_slots: int):
+    """int8-cache variant of decode_attn_block.  cache: dict with int8 k/v
+    and bf16 k_scale/v_scale; dequantization happens after the (int8 + small
+    scales) HBM read — the decode memory term halves (EXPERIMENTS.md §Perf).
+    Returns (out, new_cache_dict)."""
+    B = x1.shape[0]
+    posv = _decode_positions(pos, B)[:, None]
+    q = jnp.einsum("bsd,dnh->bsnh", x1, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x1, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x1, p["wv"])
+    if cfg.pos_embedding == "rope":
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+    q = _group(q, cfg.n_kv_heads)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    slots = jnp.mod(posv[:, 0], window_slots)
+    cache = dict(cache,
+                 k=_cache_write(cache["k"], kq, slots),
+                 v=_cache_write(cache["v"], vq, slots),
+                 k_scale=_cache_write(cache["k_scale"], ks, slots),
+                 v_scale=_cache_write(cache["v_scale"], vs, slots))
+    kd = dequantize_kv(cache["k"], cache["k_scale"], x1.dtype)
+    vd = dequantize_kv(cache["v"], cache["v_scale"], x1.dtype)
+    hd = q.shape[-1]
+    s = jnp.einsum("bckgh,bskh->bkgcs", q, kd).astype(jnp.float32) * (hd ** -0.5)
+    valid = jnp.arange(window_slots)[None] <= posv
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgcs,bskh->bckgh", a.astype(vd.dtype), vd)
+    out = jnp.einsum("bsnh,nhd->bsd", _flat(o), p["wo"])
+    return out, cache

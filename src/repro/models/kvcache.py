@@ -1,0 +1,114 @@
+"""Cache construction: shapes/dtypes for every block kind.
+
+``init_cache`` builds zeros (runtime); ``cache_struct`` builds
+ShapeDtypeStructs (dry-run) — same layout either way.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import block_period
+
+
+def _block_cache_shapes(cfg: ModelConfig, kind: str, B: int, W: int,
+                        cross: bool) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kvdt = jnp.dtype(cfg.dtype)
+    if kind == "attn":
+        if cfg.kv_dtype == "int8":
+            # quantized cache: int8 payload + per-(slot, head) bf16 scales —
+            # halves the decode HBM-read term (EXPERIMENTS.md §Perf)
+            out = {
+                "k": ((B, W, nkv, hd), jnp.int8),
+                "v": ((B, W, nkv, hd), jnp.int8),
+                "k_scale": ((B, W, nkv, 1), jnp.bfloat16),
+                "v_scale": ((B, W, nkv, 1), jnp.bfloat16),
+            }
+        else:
+            out = {
+                "k": ((B, W, nkv, hd), kvdt),
+                "v": ((B, W, nkv, hd), kvdt),
+            }
+        if cross:
+            out["enc_k"] = ((B, cfg.n_frames, nkv, hd), kvdt)
+            out["enc_v"] = ((B, cfg.n_frames, nkv, hd), kvdt)
+        return out
+    if kind == "mamba":
+        return {
+            "h": ((B, di, cfg.ssm_d_state), jnp.float32),
+            "conv": ((B, cfg.ssm_d_conv - 1, di), jnp.float32),
+        }
+    if kind == "mlstm":
+        hdm = di // nh
+        return {
+            "C": ((B, nh, hdm, hdm), jnp.float32),
+            "n": ((B, nh, hdm), jnp.float32),
+            "m": ((B, nh), jnp.float32),
+            "F": ((B, nh), jnp.float32),
+        }
+    if kind == "slstm":
+        return {k: ((B, d), jnp.float32) for k in ("h", "c", "n", "m")}
+    raise ValueError(kind)
+
+
+def cache_layout(cfg: ModelConfig, batch: int, seq_len: int):
+    """{'pos{j}': {name: (shape, dtype)}} with stacked leading period dim."""
+    p = block_period(cfg)
+    nper = cfg.n_layers // p
+    W = cfg.sliding_window or seq_len
+    W = min(W, seq_len)
+    out = {}
+    for j, (kind, _moe) in enumerate(cfg.layer_pattern()[:p]):
+        shapes = _block_cache_shapes(cfg, kind, batch, W, cfg.is_enc_dec)
+        out[f"pos{j}"] = {k: ((nper,) + s, dt) for k, (s, dt) in shapes.items()}
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    lay = cache_layout(cfg, batch, seq_len)
+
+    def make(name, shape, dt):
+        if name == "m":  # stabilizer states start at -inf-ish
+            return jnp.full(shape, -1e30, dt)
+        return jnp.zeros(shape, dt)
+
+    return {
+        pj: {k: make(k, s, dt) for k, (s, dt) in sub.items()}
+        for pj, sub in lay.items()
+    }
+
+
+def grow_cache(cache, cfg: ModelConfig, batch: int, total_len: int):
+    """Re-seat a prefill cache (W = prompt_len) into a larger circular
+    buffer sized for ``total_len`` (prompt + generation)."""
+    big = init_cache(cfg, batch, total_len)
+    out = {}
+    for pj, sub in big.items():
+        out[pj] = {}
+        for k, dv in sub.items():
+            sv = cache[pj][k]
+            if dv.shape == sv.shape:
+                out[pj][k] = sv
+            elif k in ("k", "v", "k_scale", "v_scale") and dv.shape[2] >= sv.shape[2]:
+                out[pj][k] = jax.lax.dynamic_update_slice_in_dim(
+                    dv, sv.astype(dv.dtype), 0, axis=2)
+            else:  # recurrent states carry over unchanged
+                out[pj][k] = sv
+    return out
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq_len: int, shardings=None):
+    lay = cache_layout(cfg, batch, seq_len)
+    out = {}
+    for pj, sub in lay.items():
+        out[pj] = {}
+        for k, (s, dt) in sub.items():
+            sh = None if shardings is None else shardings[pj][k]
+            out[pj][k] = jax.ShapeDtypeStruct(s, dt, sharding=sh)
+    return out

@@ -1,0 +1,129 @@
+"""Shared neural building blocks (pure JAX, framework-free).
+
+Parameters are plain nested dicts of ``jnp.ndarray``.  All matmuls run in the
+config compute dtype; norms, softmax and recurrent states run in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------- utils
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return -(-v // multiple) * multiple
+
+
+def normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+@jax.custom_vjp
+def bf16_grad_barrier(x):
+    """Identity that casts the COTANGENT to bf16 (then back to x's dtype).
+
+    Placed at block outputs: backward-pass activation cotangents cross the
+    tensor-parallel psum (and the remat residual stack) in bf16 instead of
+    fp32 — halving backward collective bytes and saved-residual memory
+    (EXPERIMENTS.md §Perf; standard mixed-precision practice: gradients
+    tolerate bf16 rounding at block granularity).
+    """
+    return x
+
+
+def _bgb_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)          # carry the primal dtype only
+
+
+def _bgb_bwd(res, g):
+    # the cotangent of a bf16 primal IS bf16 — upstream fp32 promotions
+    # (norm/gate internals) are rounded off right here, before any
+    # collective or residual-stack store sees them
+    tgt = jnp.bfloat16 if res.dtype == jnp.bfloat16 else res.dtype
+    return (g.astype(tgt),)
+
+
+bf16_grad_barrier.defvjp(_bgb_fwd, _bgb_bwd)
+
+
+# --------------------------------------------------------------------- norms
+def norm(x: jnp.ndarray, p: dict, kind: str, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm / LayerNorm in fp32, cast back to input dtype."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xf * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def init_norm(d: int, kind: str):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------- rope
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Interleaved-pair RoPE: pairs are (2i, 2i+1) along the head dim.
+
+    The interleaved layout keeps each rotation pair adjacent, so the head dim
+    can be sharded in any even-sized chunks without splitting pairs (DESIGN §5).
+
+    x: (..., S, ..., hd) with positions broadcastable to x's S position —
+    we require x shaped (B, S, *heads, hd) and positions (B, S) or (S,).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)   # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs              # (B?,S,half)
+    # insert singleton head axes between S and hd: x is (B, S, *heads, hd);
+    # works for both (S,) and per-batch (B,S) position arrays
+    for _ in range(x.ndim - 3):
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xf = x.astype(jnp.float32)
+    x0 = xf[..., 0::2]
+    x1 = xf[..., 1::2]
+    r0 = x0 * cos - x1 * sin
+    r1 = x0 * sin + x1 * cos
+    out = jnp.stack([r0, r1], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- mlp
+def mlp(x: jnp.ndarray, p: dict, activation: str) -> jnp.ndarray:
+    """SwiGLU or GeLU MLP.  Weights: w_in (d,f), w_out (f,d), [w_gate (d,f)]."""
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    if activation == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])
+
+
+def init_mlp(key, d: int, f: int, activation: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": normal(ks[0], (d, f), d ** -0.5, dtype),
+        "w_out": normal(ks[1], (f, d), f ** -0.5, dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = normal(ks[2], (d, f), d ** -0.5, dtype)
+    return p

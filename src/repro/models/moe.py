@@ -1,0 +1,183 @@
+"""Expert-parallel Mixture-of-Experts FFN.
+
+TPU-native design (DESIGN §2, §5):
+
+* Activations are replicated across the ``model`` axis (Megatron convention),
+  so no all-to-all is needed for dispatch: each model shard owns
+  ``E_local = E / model_ways`` experts, processes only the tokens routed to
+  *its* experts, and the per-token combine is a single ``psum`` over
+  ``model`` — the same collective the dense TP MLP already pays.
+* Expert weights are additionally FSDP-sharded over the ``data`` axis and
+  ``all_gather``-ed per layer (ZeRO-3); the gather transposes to a
+  reduce-scatter of gradients.
+* Dispatch avoids TPU scatter of activations: we scatter token *indices*
+  into an (E_local, capacity) slot table, then gather activations — the
+  scatter moves 4-byte ints, the bulk data movement is dense gathers.
+* Tokens are processed in chunks (scan) to bound the dispatch buffers.
+
+Capacity semantics match Spark-era MoE practice (and GShard): per chunk,
+each expert accepts at most ``capacity_factor * chunk * top_k / E`` tokens;
+overflow tokens are dropped (their residual passes through).  The router
+aux loss is the standard load-balance loss.
+
+Experts are padded to a multiple of 16 (the production ``model`` axis size)
+when E >= 16, with padded router columns masked to -inf (never routed).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import normal
+from repro.sharding.axes import MeshAxes
+
+EXPERT_PAD_MULTIPLE = 16
+MOE_CHUNK = 8192            # tokens per dispatch chunk (per data shard)
+
+
+def padded_experts(n_experts: int) -> int:
+    if n_experts >= EXPERT_PAD_MULTIPLE:
+        return -(-n_experts // EXPERT_PAD_MULTIPLE) * EXPERT_PAD_MULTIPLE
+    return n_experts
+
+
+def init_moe(key, cfg: ModelConfig, d: int) -> dict:
+    E, Ep, fe = cfg.n_experts, padded_experts(cfg.n_experts), cfg.expert_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": normal(ks[0], (d, Ep), d ** -0.5, jnp.float32),
+        "w_gate": normal(ks[1], (Ep, d, fe), d ** -0.5, dt),
+        "w_in": normal(ks[2], (Ep, d, fe), d ** -0.5, dt),
+        "w_out": normal(ks[3], (Ep, fe, d), fe ** -0.5, dt),
+    }
+    if Ep != E:  # zero padded experts; router columns masked at use
+        mask = (jnp.arange(Ep) < E).astype(dt)
+        for k in ("w_gate", "w_in", "w_out"):
+            p[k] = p[k] * mask[:, None, None]
+        p["router"] = p["router"] * mask[None, :].astype(jnp.float32)
+    if cfg.n_shared_experts:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, fe * cfg.n_shared_experts, cfg.activation, dt)
+    return p
+
+
+def _expert_ffn(xb, wg, wi, wo, activation: str):
+    """xb: (E_l, C, d) -> (E_l, C, d)."""
+    h = jnp.einsum("ecd,edf->ecf", xb, wi)
+    if activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xb, wg)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def _moe_local(x, router, wg, wi, wo, *, cfg: ModelConfig, axes: MeshAxes,
+               fsdp: bool):
+    """shard_map body.  x: (B_l, S, d) (replicated over model);
+    wg/wi/wo: (E_local, d[/fsdp], fe) local expert shards."""
+    E = padded_experts(cfg.n_experts)
+    k = cfg.top_k
+    midx = jax.lax.axis_index(axes.model)
+    nmodel = jax.lax.axis_size(axes.model)
+    E_l = E // nmodel
+    if fsdp:
+        wg = jax.lax.all_gather(wg, axes.fsdp, axis=1, tiled=True)
+        wi = jax.lax.all_gather(wi, axes.fsdp, axis=1, tiled=True)
+        wo = jax.lax.all_gather(wo, axes.fsdp, axis=2, tiled=True)
+
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ router)                       # (T, Ep)
+    if E != cfg.n_experts:
+        logits = jnp.where(jnp.arange(E) < cfg.n_experts, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                           # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), 1), 0)
+    P_e = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(f_e * P_e)
+    aux = jax.lax.pmean(aux, axes.data)
+
+    chunk = min(MOE_CHUNK, T)
+    if T % chunk:
+        chunk = T
+    nchunk = T // chunk
+    C = max(8, int(cfg.capacity_factor * chunk * k / E))
+
+    def one_chunk(carry, idx):
+        start = idx * chunk
+        xe = jax.lax.dynamic_slice_in_dim(xf, start, chunk, 0)       # (chunk, d)
+        te = jax.lax.dynamic_slice_in_dim(top_e, start, chunk, 0)    # (chunk, k)
+        tp = jax.lax.dynamic_slice_in_dim(top_p, start, chunk, 0)
+        eid = te.reshape(-1)                                         # (chunk*k,)
+        # position of each routed slot within its expert's queue
+        onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)             # (chunk*k, E)
+        pos = (jnp.cumsum(onehot, axis=0) - 1)[jnp.arange(eid.size), eid]
+        keep = pos < C
+        # local experts only: [midx*E_l, (midx+1)*E_l)
+        e_loc = eid - midx * E_l
+        local = (e_loc >= 0) & (e_loc < E_l) & keep
+        # scatter token indices into (E_l, C) slot table (ints only)
+        slot_tok = jnp.zeros((E_l, C), jnp.int32)
+        tok_of_slot = jnp.repeat(jnp.arange(chunk), k)
+        slot_tok = slot_tok.at[
+            jnp.where(local, e_loc, E_l), jnp.where(local, pos, 0)
+        ].set(tok_of_slot + 1, mode="drop")                          # 0 = empty
+        filled = slot_tok > 0
+        xb = jnp.where(filled[..., None], xe[jnp.maximum(slot_tok - 1, 0)], 0)
+        yb = _expert_ffn(xb.astype(x.dtype), wg, wi, wo, cfg.activation)
+        yb = jnp.where(filled[..., None], yb, 0)
+        # combine: for each (token, k) slot, read back its expert output
+        y_slots = jnp.where(
+            (local & keep)[:, None],
+            yb[jnp.maximum(e_loc, 0), jnp.maximum(pos, 0)].astype(jnp.float32)
+            * tp.reshape(-1)[:, None],
+            0.0,
+        )                                                            # (chunk*k, d)
+        y = y_slots.reshape(chunk, k, d).sum(axis=1)
+        dropped = jnp.sum((~keep).astype(jnp.float32)) / eid.size
+        return carry, (y, dropped)
+
+    _, (ys, dropped) = jax.lax.scan(one_chunk, 0, jnp.arange(nchunk))
+    y = ys.reshape(T, d)
+    y = jax.lax.psum(y, axes.model)                                  # combine experts
+    dropped = jax.lax.pmean(jnp.mean(dropped), axes.data)
+    return y.reshape(B, S, d).astype(x.dtype), aux, dropped
+
+
+def moe_ffn(x, p, cfg: ModelConfig, axes: MeshAxes, *, mesh,
+            batch_sharded: bool = True, fsdp: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (y, aux_loss, dropped_frac).  x: (B, S, d) global."""
+    bspec = P(axes.data) if batch_sharded else P(None)
+    xspec = P(*bspec, None, None) if batch_sharded else P(None, None, None)
+    fax = axes.fsdp if fsdp else None
+    body = functools.partial(_moe_local, cfg=cfg, axes=axes, fsdp=fsdp)
+    y, aux, dropped = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            xspec,
+            P(None, None),                       # router replicated
+            P(axes.model, fax, None),            # w_gate (E, d, fe)
+            P(axes.model, fax, None),            # w_in
+            P(axes.model, None, fax),            # w_out (E, fe, d)
+        ),
+        out_specs=(xspec, P(), P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_in"], p["w_out"])
+    if cfg.n_shared_experts:
+        from repro.models.layers import mlp
+        y = y + mlp(x, p["shared"], cfg.activation)
+    return y, aux, dropped

@@ -1,0 +1,465 @@
+"""Recurrent blocks: Mamba selective SSM, xLSTM (mLSTM / sLSTM).
+
+The xLSTM blocks additionally have *explicitly sharded* variants
+(``mlstm_block_sharded`` / ``slstm_block_sharded``): the baseline pjit
+lowering let XLA re-shard the chunk-loop einsums every iteration
+("involuntary full rematerialization" — ~1.65 TB/step of all-reduce inside
+the sLSTM time loop at 256 chips, EXPERIMENTS.md §Perf).  The shard_map
+variants pin the layout — batch over ``data``, value-dim TP over ``model``
+with exactly ONE psum per block, FSDP weight gathers at entry — and are
+what the production step uses.
+
+All recurrences carry fp32 state; sequence processing is *chunked*:
+a `lax.scan` over chunks carries the recurrent state, and within a chunk the
+first-order recurrence runs as a `lax.associative_scan` (log-depth on TPU).
+The chunk size bounds the (B, Tc, d_inner, N) discretized-parameter tensors
+that a naive Mamba materializes for the whole sequence (DESIGN §5).
+
+Decode paths are single-step state updates (O(1) per token) — these are what
+``long_500k`` exercises.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import normal
+
+SSM_CHUNK = 256
+
+
+# =============================================================== mamba =====
+def init_mamba(key, cfg: ModelConfig, d: int) -> dict:
+    di = cfg.ssm_expand * d
+    N, dc = cfg.ssm_d_state, cfg.ssm_d_conv
+    R = max(1, di // 16)                         # dt low-rank
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": normal(ks[0], (d, 2 * di), d ** -0.5, dt),
+        "conv_w": normal(ks[1], (dc, di), dc ** -0.5, jnp.float32),
+        "x_proj": normal(ks[2], (di, R + 2 * N), di ** -0.5, dt),
+        "dt_proj": normal(ks[3], (R, di), R ** -0.5, jnp.float32),
+        "dt_bias": jnp.zeros((di,), jnp.float32) - 4.6,   # softplus(-4.6) ~ 0.01
+        "A_log": jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, :]
+                 * jnp.ones((di, 1), jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": normal(ks[4], (di, d), di ** -0.5, dt),
+    }
+
+
+def _mamba_inner(xc, Bc, Cc, dtc, A, h0):
+    """One chunk of the selective scan.
+    xc: (B,Tc,di), Bc/Cc: (B,Tc,N), dtc: (B,Tc,di), A: (di,N), h0: (B,di,N).
+    Returns (y (B,Tc,di), hT)."""
+    da = jnp.exp(dtc[..., None] * A)                              # (B,Tc,di,N)
+    db = dtc[..., None] * Bc[:, :, None, :] * xc[..., None]       # (B,Tc,di,N)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a_sc, b_sc = jax.lax.associative_scan(comb, (da, db), axis=1)
+    h = a_sc * h0[:, None] + b_sc                                  # (B,Tc,di,N)
+    y = jnp.einsum("btdn,btn->btd", h, Cc)
+    return y, h[:, -1]
+
+
+def _causal_dwconv(x, w, state=None):
+    """Depthwise causal conv.  x: (B,S,di), w: (dc,di).
+    state: (B,dc-1,di) trailing context (decode) or None (zero-pad)."""
+    dc = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                         # (B,S+dc-1,di)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+            for i in range(dc))
+    return y, xp[:, -(dc - 1):]                                    # new state
+
+
+def mamba_block(x, p, cfg: ModelConfig, *, chunk: int = SSM_CHUNK):
+    """Full-sequence Mamba (train/prefill).  x: (B,S,d) -> (y, final_state)."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_d_state
+    R = p["dt_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xp, z = jnp.split(xz, 2, axis=-1)
+    xp, conv_state = _causal_dwconv(xp, p["conv_w"])
+    xp = jax.nn.silu(xp.astype(jnp.float32))
+    proj = jnp.einsum("bsd,de->bse", xp.astype(x.dtype), p["x_proj"])
+    dt_r, Bc, Cc = jnp.split(proj.astype(jnp.float32), [R, R + N], axis=-1)
+    dtv = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])      # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                       # (di,N)
+
+    Tc = min(chunk, S)
+    if S % Tc:
+        Tc = S
+    nc = S // Tc
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+
+    if nc == 1:
+        y, hT = _mamba_inner(xp, Bc, Cc, dtv, A, h0)
+    else:
+        # remat each chunk: the associative scan's linearization otherwise
+        # saves its log-depth intermediate (B,Tc,di,N) products for backward
+        # — tens of GB/layer at jamba scale (EXPERIMENTS.md §Perf)
+        @jax.checkpoint
+        def body(h, idx):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * Tc, Tc, 1)
+            y, hT = _mamba_inner(sl(xp), sl(Bc), sl(Cc), sl(dtv), A, h)
+            return hT, y
+        hT, ys = jax.lax.scan(body, h0, jnp.arange(nc))
+        y = ys.swapaxes(0, 1).reshape(B, S, di)
+
+    y = y + xp * p["D"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsd,de->bse", y.astype(x.dtype), p["out_proj"])
+    return out, {"h": hT, "conv": conv_state.astype(jnp.float32)}
+
+
+def mamba_decode(x1, p, cfg: ModelConfig, state):
+    """One-token Mamba step.  x1: (B,1,d); state: {'h': (B,di,N), 'conv': (B,dc-1,di)}."""
+    B = x1.shape[0]
+    N = cfg.ssm_d_state
+    R = p["dt_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x1, p["in_proj"])
+    xp, z = jnp.split(xz, 2, axis=-1)
+    xp, conv_state = _causal_dwconv(xp, p["conv_w"], state["conv"])
+    xp = jax.nn.silu(xp.astype(jnp.float32))
+    proj = jnp.einsum("bsd,de->bse", xp.astype(x1.dtype), p["x_proj"])
+    dt_r, Bc, Cc = jnp.split(proj.astype(jnp.float32), [R, R + N], axis=-1)
+    dtv = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dtv[..., None] * A)[:, 0]                          # (B,di,N)
+    db = (dtv[..., None] * Bc[:, :, None, :] * xp[..., None])[:, 0]
+    h = da * state["h"] + db
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None]
+    y = y + xp * p["D"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsd,de->bse", y.astype(x1.dtype), p["out_proj"])
+    return out, {"h": h, "conv": conv_state.astype(jnp.float32)}
+
+
+# =============================================================== mLSTM =====
+def init_mlstm(key, cfg: ModelConfig, d: int) -> dict:
+    di = cfg.ssm_expand * d
+    nh = cfg.n_heads
+    hd = di // nh
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        # split up-projection: the x branch feeds q/k (must stay whole per
+        # head); the z branch gates the value-sharded output, so it can be
+        # tensor-parallel along di (DESIGN §5)
+        "w_up_x": normal(ks[0], (d, di), d ** -0.5, dt),
+        # head-major (nh, hd) layouts so the value-dim TP shard of z/norm/
+        # down pairs index-for-index with the per-head value shard of h
+        "w_up_z": normal(ks[6], (d, nh, hd), d ** -0.5, dt),
+        # block-diagonal (per-head) q/k/v, as in the xLSTM paper
+        "wq": normal(ks[1], (nh, hd, hd), hd ** -0.5, dt),
+        "wk": normal(ks[2], (nh, hd, hd), hd ** -0.5, dt),
+        "wv": normal(ks[3], (nh, hd, hd), hd ** -0.5, dt),
+        "w_i": normal(ks[4], (di, nh), di ** -0.5, jnp.float32),
+        "w_f": normal(ks[5], (di, nh), di ** -0.5, jnp.float32),
+        "b_i": jnp.zeros((nh,), jnp.float32),
+        "b_f": jnp.ones((nh,), jnp.float32) * 3.0,     # start remembering
+        "mh_norm": jnp.ones((nh, hd), jnp.float32),
+        "down_proj": normal(jax.random.fold_in(key, 7), (nh, hd, d), di ** -0.5, dt),
+    }
+
+
+def _mlstm_chunk(q, k, v, logf, logi, state):
+    """One chunk of stabilized mLSTM (chunkwise-parallel linear attention).
+
+    q,k,v: (B,Tc,nh,hd) fp32; logf/logi: (B,Tc,nh); state: (C,n,m,F):
+      C: (B,nh,hd,hd), n: (B,nh,hd), m: (B,nh), F: (B,nh) cumulative log-decay.
+    Math: with F_t = sum_{s<=t} logf_s (within all history),
+      stabilizer  m_t = max(m_{t-1} + logf_t, ... ) realized as
+      m_t = max_{s<=t}(F_t - F_s + logi_s) combined with carry-in m.
+    """
+    C0, n0, m0, F0 = state
+    B, Tc, nh, hd = q.shape
+    Fc = jnp.cumsum(logf, axis=1)                                  # (B,Tc,nh)
+    # log weight of source s as seen at t: Fc_t - Fc_s + logi_s  (s <= t)
+    a = logi - Fc                                                   # (B,Tc,nh)
+    # m_t = max(Fc_t + running_max_s(a_s), Fc_t + m0): the carried state acts
+    # like a source at position -1 with log-weight m0, decayed by Fc_t.
+    m = Fc + jnp.maximum(jax.lax.cummax(a, axis=1), m0[:, None])
+    # intra-chunk attention:  w_{t,s} = exp(Fc_t - Fc_s + logi_s - m_t), s<=t
+    lw = Fc[:, :, None, :] - Fc[:, None, :, :] + logi[:, None, :, :] - m[:, :, None, :]
+    tri = jnp.tril(jnp.ones((Tc, Tc), bool))
+    w = jnp.where(tri[None, :, :, None], jnp.exp(lw), 0.0)          # (B,t,s,nh)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) * scale
+    h_intra = jnp.einsum("btsh,btsh,bshd->bthd", scores, w, v)
+    n_intra = jnp.einsum("btsh,bshd->bthd", w, k)
+    # inter-chunk: carry C0 decayed to t:  exp(Fc_t + m0 - m_t)
+    dec = jnp.exp(Fc + m0[:, None] - m)                             # (B,Tc,nh)
+    h_inter = jnp.einsum("bthd,bhde->bthe", q * dec[..., None], C0) * scale
+    n_inter = n0[:, None] * dec[..., None]
+    h_num = h_intra + h_inter
+    n_all = n_intra + n_inter
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", q, n_all)) * scale,
+                        jnp.exp(-m))
+    h = h_num / denom[..., None]
+    # chunk-final state
+    mT = m[:, -1]
+    wT = jnp.exp(Fc[:, -1:, :] - Fc + logi - mT[:, None])           # (B,Tc,nh)
+    CT = jnp.exp(Fc[:, -1] + m0 - mT)[:, :, None, None] * C0 + \
+         jnp.einsum("bsh,bshd,bshe->bhde", wT, k, v)
+    nT = jnp.exp(Fc[:, -1] + m0 - mT)[:, :, None] * n0 + \
+         jnp.einsum("bsh,bshd->bhd", wT, k)
+    return h, (CT, nT, mT, F0 + Fc[:, -1])
+
+
+def mlstm_block(x, p, cfg: ModelConfig, *, chunk: int = SSM_CHUNK):
+    """Full-sequence mLSTM.  x: (B,S,d) -> (y, state)."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    nh = cfg.n_heads
+    hd = di // nh
+    xi = jnp.einsum("bsd,de->bse", x, p["w_up_x"])
+    z = jnp.einsum("bsd,dhe->bshe", x, p["w_up_z"])      # (B,S,nh,hd)
+    xh = xi.reshape(B, S, nh, hd)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bshd,hde->bshe", xh, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bshd,hde->bshe", xh, p["wv"]).astype(jnp.float32)
+    xif = xi.astype(jnp.float32)
+    logi = xif @ p["w_i"] + p["b_i"]                                # (B,S,nh)
+    logf = jax.nn.log_sigmoid(xif @ p["w_f"] + p["b_f"])
+
+    Tc = min(chunk, S)
+    if S % Tc:
+        Tc = S
+    nc = S // Tc
+    state = (jnp.zeros((B, nh, hd, hd), jnp.float32),
+             jnp.zeros((B, nh, hd), jnp.float32),
+             jnp.full((B, nh), -1e30, jnp.float32),
+             jnp.zeros((B, nh), jnp.float32))
+    if nc == 1:
+        h, state = _mlstm_chunk(q, k, v, logf, logi, state)
+    else:
+        @jax.checkpoint
+        def body(st, idx):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * Tc, Tc, 1)
+            h, st = _mlstm_chunk(sl(q), sl(k), sl(v), sl(logf), sl(logi), st)
+            return st, h
+        state, hs = jax.lax.scan(body, state, jnp.arange(nc))
+        h = hs.swapaxes(0, 1).reshape(B, S, nh, hd)
+
+    h = h * p["mh_norm"]                                  # (B,S,nh,hd)
+    h = h * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bshe,hed->bsd", h.astype(x.dtype), p["down_proj"]), state
+
+
+def mlstm_decode(x1, p, cfg: ModelConfig, state):
+    """One-token mLSTM step."""
+    B = x1.shape[0]
+    d = x1.shape[-1]
+    di = cfg.ssm_expand * d
+    nh = cfg.n_heads
+    hd = di // nh
+    C0, n0, m0, F0 = state
+    xi = jnp.einsum("bsd,de->bse", x1, p["w_up_x"])
+    z = jnp.einsum("bsd,dhe->bshe", x1, p["w_up_z"])      # (B,1,nh,hd)
+    xh = xi.reshape(B, 1, nh, hd)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"]).astype(jnp.float32)[:, 0]
+    k = jnp.einsum("bshd,hde->bshe", xh, p["wk"]).astype(jnp.float32)[:, 0]
+    v = jnp.einsum("bshd,hde->bshe", xh, p["wv"]).astype(jnp.float32)[:, 0]
+    xif = xi.astype(jnp.float32)[:, 0]
+    logi = xif @ p["w_i"] + p["b_i"]                                # (B,nh)
+    logf = jax.nn.log_sigmoid(xif @ p["w_f"] + p["b_f"])
+    m = jnp.maximum(logf + m0, logi)
+    fz = jnp.exp(logf + m0 - m)
+    iz = jnp.exp(logi - m)
+    C = fz[:, :, None, None] * C0 + iz[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = fz[:, :, None] * n0 + iz[:, :, None] * k
+    scale = hd ** -0.5
+    num = jnp.einsum("bhd,bhde->bhe", q, C) * scale
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)) * scale, jnp.exp(-m))
+    h = (num / den[..., None])[:, None] * p["mh_norm"]    # (B,1,nh,hd)
+    h = h * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bshe,hed->bsd", h.astype(x1.dtype), p["down_proj"])
+    return out, (C, n, m, F0 + logf)
+
+
+# =============================================================== sLSTM =====
+def init_slstm(key, cfg: ModelConfig, d: int) -> dict:
+    nh = max(cfg.n_heads, 1)
+    dh = d // nh
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2)
+    return {
+        "W": normal(ks[0], (d, 4 * d), d ** -0.5, dt),              # z,i,f,o
+        "R": normal(ks[1], (nh, dh, 4 * dh), dh ** -0.5, jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              jnp.ones((d,), jnp.float32) * 3.0,
+                              jnp.zeros((d,), jnp.float32)]),
+    }
+
+
+def _slstm_step(p, d, nh, st, wx_t):
+    """st: (h,c,n,m) each (B,d) fp32; wx_t: (B,4d) input projection at t."""
+    h, c, n, m = st
+    dh = d // nh
+    hh = h.reshape(-1, nh, dh)
+    rec = jnp.einsum("bkd,kde->bke", hh, p["R"]).reshape(-1, 4 * d)
+    g = wx_t + rec + p["b"]
+    zr, ir, fr, orr = jnp.split(g, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(fr)
+    mn = jnp.maximum(lf + m, ir)
+    iz = jnp.exp(ir - mn)
+    fz = jnp.exp(lf + m - mn)
+    c = fz * c + iz * jnp.tanh(zr)
+    n = fz * n + iz
+    h = jax.nn.sigmoid(orr) * c / jnp.maximum(n, 1e-6)
+    return (h, c, n, mn)
+
+
+def slstm_block(x, p, cfg: ModelConfig):
+    """Full-sequence sLSTM (sequential scan).  x: (B,S,d) -> (y, state)."""
+    B, S, d = x.shape
+    nh = max(cfg.n_heads, 1)
+    wx = jnp.einsum("bsd,de->bse", x, p["W"]).astype(jnp.float32)
+    st = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3)) + \
+         (jnp.full((B, d), -1e30, jnp.float32),)
+
+    def body(st, wx_t):
+        st = _slstm_step(p, d, nh, st, wx_t)
+        return st, st[0]
+
+    st, hs = jax.lax.scan(body, st, wx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).astype(x.dtype), st
+
+
+def slstm_decode(x1, p, cfg: ModelConfig, state):
+    d = x1.shape[-1]
+    nh = max(cfg.n_heads, 1)
+    wx = jnp.einsum("bsd,de->bse", x1, p["W"]).astype(jnp.float32)[:, 0]
+    st = _slstm_step(p, d, nh, state, wx)
+    return st[0][:, None].astype(x1.dtype), st
+
+
+# ================================================== explicit-shard variants
+def _gather_fsdp(w, axis_name, axis: int):
+    return jax.lax.all_gather(w, axis_name, axis=axis, tiled=True)
+
+
+def mlstm_block_sharded(x, p, cfg: ModelConfig, *, mesh, axes, batch_sharded: bool,
+                        fsdp: bool, chunk: int = SSM_CHUNK):
+    """mLSTM with pinned SPMD layout (see module docstring).
+
+    Layout: x (B,S,d) batch-sharded over ``axes.data``; q/k replicated over
+    ``model``; the z-branch, value projection, mh_norm and down-projection
+    are TP-sharded on the inner dim; one psum over ``model`` at the end.
+    """
+    from jax.sharding import PartitionSpec as P
+    bspec = P(axes.data, None, None) if batch_sharded else P(None, None, None)
+    f = axes.fsdp if fsdp else None
+    m = axes.model
+    di = cfg.ssm_expand * cfg.d_model
+    nh = cfg.n_heads
+    tp_ok = (di // nh) % mesh.shape[m] == 0 and (di % mesh.shape[m] == 0)
+    mz = m if tp_ok else None
+
+    def local(x, w_up_x, w_up_z, wq, wk, wv, w_i, w_f, b_i, b_f, mh_norm, down):
+        from repro.models.layers import bf16_grad_barrier
+        x = bf16_grad_barrier(x)   # x-cotangent crosses the model-psum in bf16
+        if fsdp:
+            w_up_x = _gather_fsdp(w_up_x, axes.fsdp, 0)
+            w_up_z = _gather_fsdp(w_up_z, axes.fsdp, 0)
+            down = _gather_fsdp(down, axes.fsdp, 2)
+        B, S, d = x.shape
+        hd_l = wv.shape[-1]                           # local value dim
+        xi = jnp.einsum("bsd,de->bse", x, w_up_x)     # (B,S,di) replicated/model
+        z = jnp.einsum("bsd,dhe->bshe", x, w_up_z)    # (B,S,nh,hd_l) TP
+        xh = xi.reshape(B, S, nh, di // nh)
+        q = jnp.einsum("bshd,hde->bshe", xh, wq).astype(jnp.float32)
+        k = jnp.einsum("bshd,hde->bshe", xh, wk).astype(jnp.float32)
+        v = jnp.einsum("bshd,hde->bshe", xh, wv).astype(jnp.float32)  # e local
+        xif = xi.astype(jnp.float32)
+        logi = xif @ w_i + b_i
+        logf = jax.nn.log_sigmoid(xif @ w_f + b_f)
+
+        Tc = min(chunk, S)
+        if S % Tc:
+            Tc = S
+        nc = S // Tc
+        state = (jnp.zeros((B, nh, di // nh, hd_l), jnp.float32),
+                 jnp.zeros((B, nh, di // nh), jnp.float32),
+                 jnp.full((B, nh), -1e30, jnp.float32),
+                 jnp.zeros((B, nh), jnp.float32))
+        if nc == 1:
+            h, _ = _mlstm_chunk(q, k, v, logf, logi, state)
+        else:
+            def body(st, idx):
+                sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * Tc, Tc, 1)
+                h, st = _mlstm_chunk(sl(q), sl(k), sl(v), sl(logf), sl(logi), st)
+                return st, h
+            _, hs = jax.lax.scan(body, state, jnp.arange(nc))
+            h = hs.swapaxes(0, 1).reshape(B, S, nh, hd_l)
+        h = h * mh_norm                               # (B,S,nh,hd_l)
+        h = h * jax.nn.silu(z.astype(jnp.float32))
+        out = jnp.einsum("bshe,hed->bsd", h.astype(x.dtype), down)
+        out = jax.lax.psum(out, m)                    # the ONE TP collective
+        # name the psum result so the remat policy can SAVE it — otherwise
+        # the backward replays the collective (EXPERIMENTS.md §Perf)
+        from jax.ad_checkpoint import checkpoint_name
+        return checkpoint_name(out, "tp_out")
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(bspec,
+                  P(f, None),                # w_up_x
+                  P(f, None, mz),            # w_up_z (d, nh, hd)
+                  P(None, None, None),       # wq
+                  P(None, None, None),       # wk
+                  P(None, None, mz),         # wv (value dim TP)
+                  P(None, None), P(None, None), P(None), P(None),
+                  P(None, mz),               # mh_norm (nh, hd)
+                  P(None, mz, f)),           # down_proj (nh, hd, d)
+        out_specs=bspec, check_vma=False,
+    )(x, p["w_up_x"], p["w_up_z"], p["wq"], p["wk"], p["wv"],
+      p["w_i"], p["w_f"], p["b_i"], p["b_f"], p["mh_norm"], p["down_proj"])
+
+
+def slstm_block_sharded(x, p, cfg: ModelConfig, *, mesh, axes,
+                        batch_sharded: bool, fsdp: bool):
+    """sLSTM with a collective-free time loop: batch over ``data``, weights
+    replicated over ``model`` (the recurrence is tiny — d^2 work per step);
+    FSDP gather of the input matrix at entry."""
+    from jax.sharding import PartitionSpec as P
+    bspec = P(axes.data, None, None) if batch_sharded else P(None, None, None)
+    f = axes.fsdp if fsdp else None
+    nh = max(cfg.n_heads, 1)
+
+    def local(x, W, R, b):
+        from repro.models.layers import bf16_grad_barrier
+        x = bf16_grad_barrier(x)
+        if fsdp:
+            W = _gather_fsdp(W, axes.fsdp, 0)
+        B, S, d = x.shape
+        wx = jnp.einsum("bsd,de->bse", x, W).astype(jnp.float32)
+        st = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+              jnp.zeros((B, d), jnp.float32), jnp.full((B, d), -1e30, jnp.float32))
+        p_loc = {"R": R, "b": b}
+
+        def body(st, wx_t):
+            st = _slstm_step(p_loc, d, nh, st, wx_t)
+            return st, st[0]
+
+        _, hs = jax.lax.scan(body, st, wx.swapaxes(0, 1))
+        return hs.swapaxes(0, 1).astype(x.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(bspec, P(f, None), P(None, None, None), P(None)),
+        out_specs=bspec, check_vma=False,
+    )(x, p["W"], p["R"], p["b"])

@@ -1,0 +1,386 @@
+"""Architecture assembly: init, full-sequence forward, prefill, decode.
+
+The layer stack is organized as *periods*: the per-layer pattern
+(attention / mamba / mLSTM / sLSTM, MoE or dense FFN) repeats with period
+``p`` (jamba: 8, xlstm: 8, uniform archs: 1).  Parameters for position ``j``
+of the period are stacked across the ``n_layers/p`` repetitions and the stack
+is traversed with one ``lax.scan`` — keeping the HLO size O(period), not
+O(n_layers), which is what makes 80 production-mesh dry-run compiles
+tractable (DESIGN §5).
+
+Caches are pytrees mirroring the same (period-position -> stacked) layout:
+  attn:  {'k','v'}: (nper, B, W, n_kv, hd)   circular, W = window slots
+  mamba: {'h': (nper,B,di,N), 'conv': (nper,B,dc-1,di)}
+  mlstm: {'C','n','m','F'}; slstm: {'h','c','n','m'}
+  enc-dec adds {'enc': {'k','v'}: (nper, B, frames, n_kv, hd)}.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace as dc_replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (bf16_grad_barrier, init_mlp, init_norm, mlp,
+                                 norm, normal, pad_vocab)
+from repro.sharding.axes import MeshAxes
+
+
+# ----------------------------------------------------------------- context
+@dataclass(frozen=True)
+class Context:
+    """Everything a block needs besides params/activations."""
+    mesh: Any = None
+    axes: MeshAxes = MeshAxes()
+    mode: str = "full"              # full | decode
+    batch_sharded: bool = True
+    fsdp: bool = False
+    q_chunk: int = 1024
+    window: int = 0                 # SWA window for attn layers (0 = full)
+    pos: Any = None                 # decode: scalar absolute position
+    positions: Any = None           # full: (S,) absolute positions
+    collect_cache: bool = False     # full mode: emit cache entries (prefill)
+
+    def shard_acts(self, x):
+        """Anchor activations to (batch over data, replicated, replicated).
+
+        Without these anchors XLA's sharding propagation can legally choose a
+        batch-replicated layout for intermediates (observed: full-global-batch
+        fp32 attention scores per device); constraining the residual stream at
+        block boundaries pins the data-parallel layout everywhere between.
+        """
+        if not self.batch_sharded or self.mesh is None:
+            return x
+        spec = jax.sharding.PartitionSpec(
+            tuple(self.axes.data), *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+
+
+def block_period(cfg: ModelConfig) -> int:
+    pat = cfg.layer_pattern()
+    n = len(pat)
+    for p in range(1, n + 1):
+        if n % p == 0 and all(pat[i] == pat[i % p] for i in range(n)):
+            return p
+    return n
+
+
+# ------------------------------------------------------------------- init
+def _init_block(key, cfg: ModelConfig, kind: str, moe: bool, cross: bool) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": init_norm(d, cfg.norm)}
+    if kind == "attn":
+        p["mixer"] = attn_lib.init_attn(ks[0], cfg, d)
+    elif kind == "mamba":
+        p["mixer"] = ssm_lib.init_mamba(ks[0], cfg, d)
+    elif kind == "mlstm":
+        p["mixer"] = ssm_lib.init_mlstm(ks[0], cfg, d)
+    elif kind == "slstm":
+        p["mixer"] = ssm_lib.init_slstm(ks[0], cfg, d)
+    else:
+        raise ValueError(kind)
+    if cross and kind == "attn":
+        p["xnorm"] = init_norm(d, cfg.norm)
+        p["xattn"] = attn_lib.init_attn(ks[1], cfg, d, cross=True)
+    if moe:
+        p["norm2"] = init_norm(d, cfg.norm)
+        p["ffn"] = moe_lib.init_moe(ks[2], cfg, d)
+    elif cfg.d_ff > 0:
+        p["norm2"] = init_norm(d, cfg.norm)
+        p["ffn"] = init_mlp(ks[2], d, cfg.d_ff, cfg.activation, jnp.dtype(cfg.dtype))
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    Vp = pad_vocab(cfg.vocab_size)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": normal(keys[0], (Vp, d), 0.02, dt),
+        "final_norm": init_norm(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal(keys[1], (Vp, d), 0.02, dt)
+    if cfg.pos_embedding == "learned":
+        params["pos_embed"] = normal(keys[2], (max(cfg.n_frames, 4096), d), 0.02, dt)
+    if cfg.n_patches or cfg.is_enc_dec:
+        params["frontend_proj"] = normal(keys[3], (d, d), d ** -0.5, dt)
+
+    p = block_period(cfg)
+    nper = cfg.n_layers // p
+    pat = cfg.layer_pattern()[:p]
+    cross = cfg.is_enc_dec
+    layers = {}
+    for j, (kind, moe) in enumerate(pat):
+        jk = jax.random.fold_in(keys[4], j)
+        layers[f"pos{j}"] = jax.vmap(
+            lambda k: _init_block(k, cfg, kind, moe, cross)
+        )(jax.random.split(jk, nper))
+    params["layers"] = layers
+
+    if cfg.is_enc_dec:
+        enc_cfg = cfg  # same dims for whisper
+        params["enc"] = {
+            "layers": jax.vmap(
+                lambda k: _init_block(k, enc_cfg, "attn", False, False)
+            )(jax.random.split(keys[5], cfg.n_enc_layers)),
+            "norm": init_norm(d, cfg.norm),
+        }
+    return params
+
+
+# ------------------------------------------------------------------ embed
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    return e.astype(jnp.dtype(cfg.dtype))
+
+
+def unembed(params, cfg: ModelConfig, h):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", h, table).astype(jnp.float32)
+    Vp = table.shape[0]
+    if Vp != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(Vp) < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def add_positions(params, cfg: ModelConfig, x, positions):
+    if cfg.pos_embedding == "learned":
+        tab = params["pos_embed"]
+        idx = jnp.mod(positions, tab.shape[0])
+        x = x + jnp.take(tab, idx, axis=0).astype(x.dtype)
+    return x
+
+
+# ----------------------------------------------------------------- blocks
+def _apply_ffn(x, p, cfg: ModelConfig, moe: bool, ctx: Context):
+    """Returns (y, aux)."""
+    if "ffn" not in p:
+        return jnp.zeros_like(x), jnp.float32(0.0)
+    h = norm(x, p["norm2"], cfg.norm)
+    if moe:
+        y, aux, _dropped = moe_lib.moe_ffn(
+            h, p["ffn"], cfg, ctx.axes, mesh=ctx.mesh,
+            batch_sharded=ctx.batch_sharded, fsdp=ctx.fsdp)
+        return y, aux * cfg.router_aux_coef
+    return mlp(h, p["ffn"], cfg.activation), jnp.float32(0.0)
+
+
+def apply_block(x, p, cfg: ModelConfig, kind: str, moe: bool, ctx: Context,
+                cache=None, enc_out=None):
+    """Returns (x, new_cache, aux)."""
+    h = norm(x, p["norm1"], cfg.norm)
+    newc = None
+    if kind == "attn":
+        if ctx.mode == "decode":
+            if cfg.kv_dtype == "int8":
+                a, newc = attn_lib.decode_attn_block_q(
+                    h, p["mixer"], cfg, cache, ctx.pos,
+                    window_slots=cache["k"].shape[1])
+            else:
+                a, ck, cv = attn_lib.decode_attn_block(
+                    h, p["mixer"], cfg, cache["k"], cache["v"], ctx.pos,
+                    window_slots=cache["k"].shape[1])
+                newc = dict(cache, k=ck, v=cv)
+        else:
+            a, (k, v) = attn_lib.attn_block(
+                h, p["mixer"], cfg, ctx.positions,
+                window=ctx.window, q_chunk=ctx.q_chunk)
+            W = ctx.window or k.shape[1]
+            if cfg.kv_dtype == "int8":
+                kq, ks = attn_lib.quantize_kv(k[:, -W:])
+                vq, vs = attn_lib.quantize_kv(v[:, -W:])
+                newc = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                newc = {"k": k[:, -W:], "v": v[:, -W:]}
+        x = x + a
+        if "xattn" in p:
+            hx = norm(x, p["xnorm"], cfg.norm)
+            if ctx.mode == "decode":
+                cx = attn_lib.decode_cross_attn_block(
+                    hx, p["xattn"], cache["enc_k"], cache["enc_v"])
+            else:
+                ek, ev = attn_lib.project_enc_kv(enc_out, p["xattn"])
+                cx = attn_lib.cross_attn_block(hx, p["xattn"], cfg, ek, ev,
+                                               q_chunk=ctx.q_chunk)
+                newc["enc_k"], newc["enc_v"] = ek, ev
+            if ctx.mode == "decode":
+                newc["enc_k"], newc["enc_v"] = cache["enc_k"], cache["enc_v"]
+            x = x + cx
+    elif kind == "mamba":
+        if ctx.mode == "decode":
+            a, st = ssm_lib.mamba_decode(h, p["mixer"], cfg, cache)
+        else:
+            a, st = ssm_lib.mamba_block(h, p["mixer"], cfg)
+        newc = st
+        x = x + a
+    elif kind == "mlstm":
+        if ctx.mode == "decode":
+            a, st = ssm_lib.mlstm_decode(
+                h, p["mixer"], cfg,
+                (cache["C"], cache["n"], cache["m"], cache["F"]))
+            newc = {"C": st[0], "n": st[1], "m": st[2], "F": st[3]}
+        elif ctx.mesh is not None and not ctx.collect_cache:
+            # explicit-layout SPMD variant (no cache output): kills the
+            # per-chunk resharding collectives the auto-sharded form hits
+            a = ssm_lib.mlstm_block_sharded(
+                h, p["mixer"], cfg, mesh=ctx.mesh, axes=ctx.axes,
+                batch_sharded=ctx.batch_sharded, fsdp=ctx.fsdp)
+            newc = None
+        else:
+            a, st = ssm_lib.mlstm_block(h, p["mixer"], cfg)
+            newc = {"C": st[0], "n": st[1], "m": st[2], "F": st[3]}
+        x = x + a
+    elif kind == "slstm":
+        if ctx.mode == "decode":
+            a, st = ssm_lib.slstm_decode(
+                h, p["mixer"], cfg,
+                (cache["h"], cache["c"], cache["n"], cache["m"]))
+            newc = {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+        elif ctx.mesh is not None and not ctx.collect_cache:
+            a = ssm_lib.slstm_block_sharded(
+                h, p["mixer"], cfg, mesh=ctx.mesh, axes=ctx.axes,
+                batch_sharded=ctx.batch_sharded, fsdp=ctx.fsdp)
+            newc = None
+        else:
+            a, st = ssm_lib.slstm_block(h, p["mixer"], cfg)
+            newc = {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+        x = x + a
+    else:
+        raise ValueError(kind)
+
+    y, aux = _apply_ffn(x, p, cfg, moe, ctx)
+    return x + y, newc, aux
+
+
+# ------------------------------------------------------------------ trunk
+def _scan_layers(x, params, cfg: ModelConfig, ctx: Context, cache=None,
+                 enc_out=None, collect_cache=False):
+    """Scan the period-structured decoder stack.
+
+    Returns (x, new_cache_or_None, aux_sum)."""
+    p = block_period(cfg)
+    pat = cfg.layer_pattern()[:p]
+    layer_params = tuple(params["layers"][f"pos{j}"] for j in range(p))
+    cache_xs = tuple(cache[f"pos{j}"] for j in range(p)) if cache is not None else None
+
+    def body(carry, xs):
+        x, aux = carry
+        pp = xs[0]
+        cc = xs[1] if cache_xs is not None else (None,) * p
+        newcs = []
+        for j, (kind, moe) in enumerate(pat):
+            x = ctx.shard_acts(x)
+            if ctx.mode == "full":
+                # pin backward cotangents to bf16 at block boundaries: the
+                # norm backward otherwise promotes the residual cotangent
+                # chain to fp32, doubling TP-psum bytes and remat residuals
+                x = bf16_grad_barrier(x)
+            x, nc, a = apply_block(x, pp[j], cfg, kind, moe, ctx,
+                                   cache=cc[j], enc_out=enc_out)
+            newcs.append(nc)
+            aux = aux + a
+        x = ctx.shard_acts(x)
+        ys = tuple(newcs) if (collect_cache or cache_xs is not None) else None
+        return (x, aux), ys
+
+    # remat policy: recompute everything EXCEPT named TP-psum outputs —
+    # replaying a collective costs ICI twice, saving it costs bf16 bytes
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.save_only_these_names("tp_out")
+    ) if ctx.mode == "full" else body
+    xs = (layer_params,) if cache_xs is None else (layer_params, cache_xs)
+    (x, aux), ys = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), xs)
+    new_cache = None
+    if ys is not None:
+        new_cache = {f"pos{j}": ys[j] for j in range(p)}
+    return x, new_cache, aux
+
+
+def encode(params, cfg: ModelConfig, frames, ctx: Context):
+    """Whisper-style encoder over stubbed frame embeddings (B,F,d)."""
+    x = jnp.einsum("bfd,de->bfe", frames.astype(jnp.dtype(cfg.dtype)),
+                   params["frontend_proj"])
+    x = add_positions(params, cfg, x, jnp.arange(x.shape[1]))
+    ectx = dc_replace(ctx, window=0)
+
+    def body(carry, pp):
+        carry = ectx.shard_acts(carry)
+        h = norm(carry, pp["norm1"], cfg.norm)
+        q, k, v = attn_lib.project_qkv(h, pp["mixer"], cfg, jnp.arange(h.shape[1]))
+        a = attn_lib.attention(q, k, v, causal=False, q_chunk=ectx.q_chunk)
+        a = jnp.einsum("bsnh,nhd->bsd", a, pp["mixer"]["wo"])
+        x2 = carry + a
+        h2 = norm(x2, pp["norm2"], cfg.norm)
+        return x2 + mlp(h2, pp["ffn"], cfg.activation), None
+
+    # remat policy: recompute everything EXCEPT named TP-psum outputs —
+    # replaying a collective costs ICI twice, saving it costs bf16 bytes
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.save_only_these_names("tp_out")
+    ) if ctx.mode == "full" else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"]["layers"])
+    return norm(x, params["enc"]["norm"], cfg.norm)
+
+
+# -------------------------------------------------------------- public api
+def build_inputs_embeds(params, cfg: ModelConfig, tokens, frontend=None):
+    """tokens: (B, S_text).  VLM: prepend projected patch embeddings."""
+    e = embed_tokens(params, cfg, tokens)
+    if cfg.n_patches and frontend is not None:
+        pe = jnp.einsum("bpd,de->bpe", frontend.astype(e.dtype),
+                        params["frontend_proj"])
+        e = jnp.concatenate([pe, e], axis=1)
+    return e
+
+
+def forward(params, cfg: ModelConfig, tokens, ctx: Context, *,
+            frontend=None, collect_cache=False):
+    """Full-sequence forward.  Returns (hidden (B,S,d), cache|None, aux).
+
+    ``frontend``: VLM patch embeddings (B,P,d) or audio frames (B,F,d)."""
+    enc_out = None
+    if cfg.is_enc_dec:
+        enc_out = encode(params, cfg, frontend, ctx)
+        x = embed_tokens(params, cfg, tokens)
+    else:
+        x = build_inputs_embeds(params, cfg, tokens, frontend)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x = add_positions(params, cfg, x, positions)
+    ctx = dc_replace(ctx, positions=positions, mode="full",
+                     collect_cache=collect_cache)
+    x, cache, aux = _scan_layers(x, params, cfg, ctx, enc_out=enc_out,
+                                 collect_cache=collect_cache)
+    x = norm(x, params["final_norm"], cfg.norm)
+    return x, cache, aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, ctx: Context, *, frontend=None):
+    """Process a prompt; return (last-token logits, cache, seq_len)."""
+    h, cache, _aux = forward(params, cfg, tokens, ctx, frontend=frontend,
+                             collect_cache=True)
+    logits = unembed(params, cfg, h[:, -1:])
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos, ctx: Context):
+    """One-token serve step.  token: (B,1) int32; pos: scalar OR (B,) int32
+    absolute position of each sequence's token (vector positions enable
+    continuous batching).  Returns (logits (B,1,V), new_cache)."""
+    from repro.models.attention import _decode_positions
+    x = embed_tokens(params, cfg, token)
+    posn = _decode_positions(pos, token.shape[0])
+    x = add_positions(params, cfg, x, posn[:, None])
+    ctx = dc_replace(ctx, mode="decode", pos=pos)
+    x, new_cache, _aux = _scan_layers(x, params, cfg, ctx, cache=cache)
+    x = norm(x, params["final_norm"], cfg.norm)
+    return unembed(params, cfg, x), new_cache

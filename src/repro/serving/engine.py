@@ -1,0 +1,140 @@
+"""Batched serving engine: request queue -> padded prefill batches ->
+lockstep decode -> per-request completion.
+
+Production shape without dynamic shapes: requests are bucketed by prompt
+length (padded to the bucket), prefilled as one batch, then decoded in
+lockstep against the shared circular KV cache.  Left-padding keeps every
+request's last prompt token aligned at the same position, so the scalar
+decode position is valid batch-wide; pad tokens are masked from attention
+by their slot validity (they occupy slots before every real token's
+window... they are attended but carry the pad embedding — acceptable for
+synthetic serving; a per-slot position variant is the engine's TODO and is
+measured in EXPERIMENTS.md §Perf as future work).
+
+The engine is deliberately host-side simple: all device work goes through
+the two jitted programs from ``train.loop`` (prefill, serve_step), which are
+the same programs the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.kvcache import grow_cache
+from repro.train.loop import make_prefill, make_serve_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (L,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+class ServeEngine:
+    """Static-batching engine over the framework's prefill/decode programs."""
+
+    def __init__(self, params, cfg: ModelConfig, mesh, *, batch: int = 4,
+                 bucket: int = 64, max_total: int = 256, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.mesh = mesh
+        self.batch = batch
+        self.bucket = bucket
+        self.max_total = max_total
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        shape_pf = InputShape("pf", bucket, batch, "prefill")
+        shape_dec = InputShape("dec", max_total, batch, "decode")
+        self._prefill, *_ = make_prefill(cfg, mesh, shape_pf,
+                                         q_chunk=min(512, bucket), fsdp=False)
+        self._decode, *_ = make_serve_step(cfg, mesh, shape_dec, fsdp=False,
+                                           donate=False)
+
+    # ------------------------------------------------------------- public
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               temperature: float = 0.0) -> int:
+        rid = len(self.finished) + len(self.queue)
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens, temperature,
+                                  t_enqueue=time.time()))
+        return rid
+
+    def run(self) -> Dict[int, Request]:
+        """Drain the queue; returns finished requests."""
+        while self.queue:
+            batch_reqs = self.queue[: self.batch]
+            self.queue = self.queue[self.batch:]
+            self._serve_batch(batch_reqs)
+        return self.finished
+
+    def stats(self) -> Dict[str, float]:
+        reqs = list(self.finished.values())
+        if not reqs:
+            return {}
+        ttft = [r.t_first_token - r.t_enqueue for r in reqs]
+        total = [r.t_done - r.t_enqueue for r in reqs]
+        toks = sum(len(r.out_tokens) for r in reqs)
+        span = max(r.t_done for r in reqs) - min(r.t_enqueue for r in reqs)
+        return {"requests": len(reqs), "tokens": toks,
+                "ttft_mean_s": float(np.mean(ttft)),
+                "latency_mean_s": float(np.mean(total)),
+                "throughput_tok_s": toks / max(span, 1e-9)}
+
+    # ------------------------------------------------------------ private
+    def _serve_batch(self, reqs: List[Request]) -> None:
+        cfg = self.cfg
+        B, L = self.batch, self.bucket
+        toks = np.zeros((B, L), np.int32)
+        for i, r in enumerate(reqs):
+            p = r.prompt[-L:]
+            toks[i, L - len(p):] = p                      # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.n_patches:
+            batch["frontend"] = jnp.zeros((B, cfg.n_patches, cfg.d_model))
+        elif cfg.is_enc_dec:
+            batch["frontend"] = jnp.zeros((B, cfg.n_frames, cfg.d_model))
+        logits, cache = self._prefill(self.params, batch)
+        with jax.set_mesh(self.mesh):
+            cache = grow_cache(cache, cfg, B, self.max_total)
+        now = time.time()
+        tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))[:, None]
+        for i, r in enumerate(reqs):
+            r.out_tokens.append(int(tok[i, 0]))
+            r.t_first_token = now
+        max_gen = max(r.max_new_tokens for r in reqs)
+        pos0 = L + (cfg.n_patches or 0)
+        cur = jnp.asarray(tok, jnp.int32)
+        for step in range(1, max_gen):
+            lg, cache = self._decode(self.params, cur, cache,
+                                     jnp.int32(pos0 + step - 1))
+            temp = max((r.temperature for r in reqs), default=0.0)
+            if temp > 0:
+                self.key, sk = jax.random.split(self.key)
+                cur = jax.random.categorical(sk, lg[:, 0] / temp)[:, None]
+            else:
+                cur = jnp.argmax(lg[:, 0], axis=-1)[:, None]
+            cur = cur.astype(jnp.int32)
+            vals = np.asarray(cur)
+            for i, r in enumerate(reqs):
+                if len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(vals[i, 0]))
+        now = time.time()
+        for r in reqs:
+            r.done = True
+            r.t_done = now
+            self.finished[r.rid] = r

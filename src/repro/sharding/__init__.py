@@ -1,0 +1,1 @@
+from repro.sharding.axes import MeshAxes, axes_from_mesh, make_test_mesh

@@ -1,0 +1,55 @@
+"""Mesh axis conventions.
+
+Single-pod mesh: (data, model) = (16, 16).
+Multi-pod mesh:  (pod, data, model) = (2, 16, 16).
+
+``MeshAxes`` names the roles:
+  * ``data``  — tuple of axes the batch shards over (('pod','data') multi-pod).
+  * ``model`` — tensor-parallel axis.
+  * ``fsdp``  — axis parameters/optimizer shard over (ZeRO); kept within a pod
+    so the pod axis carries only gradient all-reduce traffic (DESIGN §8).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    data: Tuple[str, ...] = ("data",)
+    model: str = "model"
+    fsdp: str = "data"
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(self.data) + (self.model,)
+
+
+SINGLE_POD = MeshAxes(data=("data",), model="model", fsdp="data")
+MULTI_POD = MeshAxes(data=("pod", "data"), model="model", fsdp="data")
+
+
+def axes_from_mesh(mesh: Mesh) -> MeshAxes:
+    return MULTI_POD if "pod" in mesh.axis_names else SINGLE_POD
+
+
+def mesh_sizes(mesh: Mesh, axes: MeshAxes) -> Tuple[int, int]:
+    """(total batch-sharding ways, model-parallel ways)."""
+    d = 1
+    for a in axes.data:
+        d *= mesh.shape[a]
+    return d, mesh.shape[axes.model]
+
+
+def make_test_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh for CPU tests (1x1 by default)."""
+    devs = jax.devices()[: data * model]
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        devices=devs,
+    )

@@ -1,0 +1,304 @@
+"""PartitionSpec rules for params, caches, and inputs.
+
+The spec trees mirror ``models.transformer.init_params`` /
+``models.kvcache.cache_layout`` exactly.  Tensor parallelism (axis
+``model``) follows Megatron conventions — column-parallel up-projections,
+row-parallel down-projections with an implicit all-reduce; ZeRO-style FSDP
+shards the *other* big dim over the ``data`` axis (gathered per layer,
+transposed to gradient reduce-scatters).  Dims that don't divide the mesh
+axis fall back to replication (guarded by ``_ok``).
+
+The paper's technique lives on the ``data`` axis: every train step is
+"partition examples, compute local statistics (gradients), all-reduce" —
+Spark's treeAggregate as an ICI collective (DESIGN §1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.attention import padded_heads
+from repro.models.moe import padded_experts
+from repro.models.transformer import block_period
+from repro.sharding.axes import MeshAxes, mesh_sizes
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+class SpecBuilder:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, axes: MeshAxes,
+                 fsdp: bool):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axes = axes
+        self.model = axes.model
+        self.fsdp = axes.fsdp if fsdp else None
+        self.fsdp_enabled = fsdp
+
+    def ok(self, dim: int, axis) -> Any:
+        """axis if dim divides its mesh size, else None (replicate)."""
+        if axis is None:
+            return None
+        return axis if dim % _axis_size(self.mesh, axis) == 0 else None
+
+    # ------------------------------------------------------------- blocks
+    def _attn_specs(self) -> dict:
+        cfg = self.cfg
+        nhp, _G = padded_heads(cfg)
+        m, f = self.model, self.fsdp
+        d = cfg.d_model
+        kv_ax = self.ok(cfg.n_kv_heads, m)
+        return {
+            "wq": P(self.ok(d, f), self.ok(nhp, m), None),
+            "wk": P(self.ok(d, f), kv_ax, None),
+            "wv": P(self.ok(d, f), kv_ax, None),
+            "wo": P(self.ok(nhp, m), None, self.ok(d, f)),
+        }
+
+    def _mlp_specs(self, d: int, ff: int) -> dict:
+        m, f = self.model, self.fsdp
+        sp = {
+            "w_in": P(self.ok(d, f), self.ok(ff, m)),
+            "w_out": P(self.ok(ff, m), self.ok(d, f)),
+        }
+        if self.cfg.activation == "swiglu":
+            sp["w_gate"] = P(self.ok(d, f), self.ok(ff, m))
+        return sp
+
+    def _moe_specs(self) -> dict:
+        cfg = self.cfg
+        m, f = self.model, self.fsdp
+        Ep, fe, d = padded_experts(cfg.n_experts), cfg.expert_ff, cfg.d_model
+        e_ax = self.ok(Ep, m)
+        sp = {
+            "router": P(None, None),
+            "w_gate": P(e_ax, self.ok(d, f), None),
+            "w_in": P(e_ax, self.ok(d, f), None),
+            "w_out": P(e_ax, None, self.ok(d, f)),
+        }
+        if cfg.n_shared_experts:
+            sp["shared"] = self._mlp_specs(d, fe * cfg.n_shared_experts)
+        return sp
+
+    def _mamba_specs(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        di = cfg.ssm_expand * d
+        m, f = self.model, self.fsdp
+        di_ax = self.ok(di, m)
+        return {
+            "in_proj": P(self.ok(d, f), self.ok(2 * di, m)),
+            "conv_w": P(None, di_ax),
+            "x_proj": P(di_ax, None),
+            "dt_proj": P(None, di_ax),
+            "dt_bias": P(di_ax),
+            "A_log": P(di_ax, None),
+            "D": P(di_ax),
+            "out_proj": P(di_ax, self.ok(d, f)),
+        }
+
+    def _mlstm_specs(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        di = cfg.ssm_expand * d
+        nh = cfg.n_heads
+        hd = di // nh
+        m, f = self.model, self.fsdp
+        hd_ax = self.ok(hd, m)                        # value dim is TP-sharded
+        return {
+            "w_up_x": P(self.ok(d, f), None),
+            "w_up_z": P(self.ok(d, f), None, hd_ax),
+            "wq": P(None, None, None),
+            "wk": P(None, None, None),
+            "wv": P(None, None, hd_ax),
+            "w_i": P(None, None),
+            "w_f": P(None, None),
+            "b_i": P(None),
+            "b_f": P(None),
+            "mh_norm": P(None, hd_ax),
+            "down_proj": P(None, hd_ax, self.ok(d, f)),
+        }
+
+    def _slstm_specs(self) -> dict:
+        # sLSTM is sequential and tiny; replicate over model, FSDP the input mat
+        d = self.cfg.d_model
+        return {
+            "W": P(self.ok(d, self.fsdp), None),
+            "R": P(None, None, None),
+            "b": P(None),
+        }
+
+    def _norm_specs(self) -> dict:
+        sp = {"scale": P(None)}
+        if self.cfg.norm == "layernorm":
+            sp["bias"] = P(None)
+        return sp
+
+    def _block_specs(self, kind: str, moe: bool, cross: bool) -> dict:
+        cfg = self.cfg
+        sp: Dict[str, Any] = {"norm1": self._norm_specs()}
+        if kind == "attn":
+            sp["mixer"] = self._attn_specs()
+        elif kind == "mamba":
+            sp["mixer"] = self._mamba_specs()
+        elif kind == "mlstm":
+            sp["mixer"] = self._mlstm_specs()
+        elif kind == "slstm":
+            sp["mixer"] = self._slstm_specs()
+        if cross and kind == "attn":
+            sp["xnorm"] = self._norm_specs()
+            sp["xattn"] = self._attn_specs()
+        if moe:
+            sp["norm2"] = self._norm_specs()
+            sp["ffn"] = self._moe_specs()
+        elif cfg.d_ff > 0:
+            sp["norm2"] = self._norm_specs()
+            sp["ffn"] = self._mlp_specs(cfg.d_model, cfg.d_ff)
+        return sp
+
+    # -------------------------------------------------------------- trees
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        m, f = self.model, self.fsdp
+        d = cfg.d_model
+        from repro.models.layers import pad_vocab
+        Vp = pad_vocab(cfg.vocab_size)
+        specs: Dict[str, Any] = {
+            "embed": P(self.ok(Vp, m), self.ok(d, f)),
+            "final_norm": self._norm_specs(),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P(self.ok(Vp, m), self.ok(d, f))
+        if cfg.pos_embedding == "learned":
+            specs["pos_embed"] = P(None, None)
+        if cfg.n_patches or cfg.is_enc_dec:
+            specs["frontend_proj"] = P(self.ok(d, f), None)
+
+        def stack(tree):
+            return jax.tree.map(lambda s: P(None, *s), tree,
+                                is_leaf=lambda x: isinstance(x, P))
+
+        p = block_period(cfg)
+        pat = cfg.layer_pattern()[:p]
+        specs["layers"] = {
+            f"pos{j}": stack(self._block_specs(kind, moe, cfg.is_enc_dec))
+            for j, (kind, moe) in enumerate(pat)
+        }
+        if cfg.is_enc_dec:
+            specs["enc"] = {
+                "layers": stack(self._block_specs("attn", False, False)),
+                "norm": self._norm_specs(),
+            }
+        return specs
+
+    # -------------------------------------------------------------- cache
+    def cache_specs(self, shape: InputShape) -> dict:
+        """Specs mirroring kvcache.cache_layout.
+
+        decode_32k: batch over data, seq/state over model.
+        long_500k (B=1): seq/state over ALL axes (flash-decoding style)."""
+        cfg = self.cfg
+        axes = self.axes
+        B = shape.global_batch
+        batch_ax = self.ok(B, tuple(axes.data))
+        if batch_ax is not None:
+            seq_ax = axes.model
+        else:
+            seq_ax = tuple(axes.data) + (axes.model,)
+        W = cfg.sliding_window or shape.seq_len
+        W = min(W, shape.seq_len)
+        di = cfg.ssm_expand * cfg.d_model
+        nh = cfg.n_heads
+        hdm = di // max(nh, 1)
+        d = cfg.d_model
+
+        def kind_specs(kind: str) -> dict:
+            if kind == "attn":
+                sp = {
+                    "k": P(None, batch_ax, self.ok(W, seq_ax), None, None),
+                    "v": P(None, batch_ax, self.ok(W, seq_ax), None, None),
+                }
+                if cfg.kv_dtype == "int8":
+                    sp["k_scale"] = P(None, batch_ax, self.ok(W, seq_ax),
+                                      None, None)
+                    sp["v_scale"] = P(None, batch_ax, self.ok(W, seq_ax),
+                                      None, None)
+                if cfg.is_enc_dec:
+                    sp["enc_k"] = P(None, batch_ax, None, None, None)
+                    sp["enc_v"] = P(None, batch_ax, None, None, None)
+                return sp
+            if kind == "mamba":
+                return {
+                    "h": P(None, batch_ax, self.ok(di, seq_ax), None),
+                    "conv": P(None, batch_ax, None, self.ok(di, seq_ax)),
+                }
+            if kind == "mlstm":
+                if batch_ax is not None:
+                    c_spec = P(None, batch_ax, None, None,
+                               self.ok(hdm, axes.model))
+                else:
+                    c_spec = P(None, None, None,
+                               self.ok(hdm, tuple(axes.data)),
+                               self.ok(hdm, axes.model))
+                return {
+                    "C": c_spec,
+                    "n": P(None, batch_ax, None, None),
+                    "m": P(None, batch_ax, None),
+                    "F": P(None, batch_ax, None),
+                }
+            if kind == "slstm":
+                return {k: P(None, batch_ax, self.ok(d, axes.model))
+                        for k in ("h", "c", "n", "m")}
+            raise ValueError(kind)
+
+        p = block_period(cfg)
+        return {
+            f"pos{j}": kind_specs(kind)
+            for j, (kind, _moe) in enumerate(cfg.layer_pattern()[:p])
+        }
+
+    # -------------------------------------------------------------- inputs
+    def batch_spec(self, global_batch: int):
+        return self.ok(global_batch, tuple(self.axes.data))
+
+
+# ------------------------------------------------------------- public api
+def build(cfg: ModelConfig, mesh: Mesh, axes: MeshAxes, fsdp: bool) -> SpecBuilder:
+    return SpecBuilder(cfg, mesh, axes, fsdp)
+
+
+def auto_fsdp_serving(cfg: ModelConfig, mesh: Mesh, axes: MeshAxes) -> bool:
+    """Serving: params stay TP-only (no per-token FSDP gathers) unless the
+    bf16 weights alone exceed the HBM budget (qwen3-235B: 29 GB/chip TP-16
+    -> must stay data-sharded; EXPERIMENTS.md §Perf llama-decode iteration)."""
+    _d, m = mesh_sizes(mesh, axes)
+    bytes_per = 2 if cfg.param_dtype == "bfloat16" else 4
+    return cfg.param_count() * bytes_per / m > 12e9
+
+
+def auto_fsdp(cfg: ModelConfig, mesh: Mesh, axes: MeshAxes) -> bool:
+    """Enable FSDP when TP-sharded params + Adam moments exceed ~1 GB/device
+    (moments assumed fp32: 2 + 8 bytes per param)."""
+    _d, m = mesh_sizes(mesh, axes)
+    bytes_per = (2 if cfg.param_dtype == "bfloat16" else 4) + 8
+    return cfg.param_count() * bytes_per / m > 1e9
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

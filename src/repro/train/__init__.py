@@ -1,0 +1,3 @@
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update, lr_at
+from repro.train.loop import TrainConfig, make_train_step, make_prefill, make_serve_step, init_state
+from repro.train import checkpoint

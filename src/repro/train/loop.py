@@ -1,0 +1,227 @@
+"""Step factories: train / prefill / serve, with full sharding plumbing.
+
+``make_train_step(cfg, mesh, ...)`` returns a jitted SPMD step whose
+in/out shardings implement the paper's data-parallel scheme (batch over
+``data``/``pod``, gradients all-reduced — Spark treeAggregate on ICI) plus
+TP/FSDP for the big archs.  ``make_prefill``/``make_serve_step`` build the
+serving path with the 2-D-sharded KV cache (DESIGN §5).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import transformer as tf
+from repro.models.kvcache import init_cache
+from repro.sharding import specs as specs_lib
+from repro.sharding.axes import MeshAxes, axes_from_mesh
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    q_chunk: int = 1024
+    window: int = 0                 # train-time SWA window (0 = cfg default)
+    microbatches: int = 0           # 0 = auto (bound per-device live tokens)
+    zero1: bool = False             # ZeRO-1: shard only optimizer state
+
+
+def auto_microbatches(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                      axes: MeshAxes, target_tokens_per_dev: int = 16384) -> int:
+    """Gradient-accumulation split: bounds the rematted activation stack
+    (n_layers x tokens_per_dev x d bytes) per device."""
+    d_ways = 1
+    for a in axes.data:
+        d_ways *= mesh.shape[a]
+    if shape.global_batch % d_ways:
+        return 1
+    local_tokens = (shape.global_batch // d_ways) * shape.seq_len
+    k = max(1, local_tokens // target_tokens_per_dev)
+    # k must divide the local batch
+    local_b = shape.global_batch // d_ways
+    while local_b % k:
+        k -= 1
+    return max(k, 1)
+
+
+def _ctx(cfg, mesh, axes, *, batch_sharded, fsdp, q_chunk, window):
+    return tf.Context(mesh=mesh, axes=axes, batch_sharded=batch_sharded,
+                      fsdp=fsdp, q_chunk=q_chunk,
+                      window=window if window else cfg.sliding_window)
+
+
+def cross_entropy(logits, labels):
+    """logits (B,S,V) fp32; labels (B,S) int32, -1 = ignore."""
+    mask = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / denom, denom
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: tf.Context):
+    h, _, aux = tf.forward(params, cfg, batch["tokens"], ctx,
+                           frontend=batch.get("frontend"))
+    if cfg.n_patches:                       # loss on text positions only
+        h = h[:, cfg.n_patches:]
+    logits = tf.unembed(params, cfg, h)
+    ce, _ = cross_entropy(logits, batch["labels"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def init_state(rng, cfg: ModelConfig, tc: TrainConfig):
+    params = tf.init_params(rng, cfg)
+    return {"params": params, "opt": adamw_init(params, tc.opt)}
+
+
+def state_specs(cfg: ModelConfig, mesh: Mesh, axes: MeshAxes, fsdp: bool,
+                zero1: bool = False):
+    """zero1: shard ONLY the optimizer moments over data (params replicated
+    over data, TP over model).  The update step then reduce-scatters grads
+    to the moment sharding and all-gathers params ONCE per step — vs
+    ZeRO-3's per-layer-per-microbatch weight gathers (EXPERIMENTS.md §Perf).
+    """
+    sb = specs_lib.build(cfg, mesh, axes, fsdp)
+    ps = sb.param_specs()
+    if zero1:
+        ps = specs_lib.build(cfg, mesh, axes, False).param_specs()
+        ms = sb.param_specs()       # moments keep the data-sharded layout
+        return {"params": ps, "opt": {"m": ms, "v": ms, "step": P()}}
+    return {
+        "params": ps,
+        "opt": {"m": ps, "v": ps, "step": P()},
+    }
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                axes: MeshAxes):
+    sb = specs_lib.build(cfg, mesh, axes, fsdp=False)
+    bax = sb.batch_spec(shape.global_batch)
+    out = {"tokens": P(bax, None)}
+    if shape.kind == "train":
+        out["labels"] = P(bax, None)
+    if cfg.n_patches or cfg.is_enc_dec:
+        out["frontend"] = P(bax, None, None)
+    return out
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, tc: TrainConfig,
+                    shape: InputShape, *, fsdp: Optional[bool] = None,
+                    donate: bool = True):
+    axes = axes_from_mesh(mesh)
+    if fsdp is None:
+        fsdp = specs_lib.auto_fsdp(cfg, mesh, axes)
+    sspecs = state_specs(cfg, mesh, axes, fsdp, zero1=tc.zero1)
+    bspecs = batch_specs(cfg, shape, mesh, axes)
+    bsharded = bspecs["tokens"][0] is not None
+    # under ZeRO-1 the forward sees replicated-over-data params (no gathers)
+    ctx = _ctx(cfg, mesh, axes, batch_sharded=bsharded,
+               fsdp=fsdp and not tc.zero1,
+               q_chunk=tc.q_chunk, window=tc.window)
+    k = tc.microbatches or auto_microbatches(cfg, shape, mesh, axes)
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, cfg, ctx)
+
+    def step(state, batch):
+        if k == 1:
+            (loss, metrics), grads = grad_fn(state["params"], batch)
+        else:
+            # gradient accumulation: scan over k microbatches (batch-major
+            # split keeps each microbatch data-sharded); the fp32 accumulator
+            # is pinned to the MOMENT sharding, so under ZeRO-1 each
+            # microbatch's gradient sync lowers to a reduce-scatter (1/N
+            # bytes) instead of a full all-reduce (EXPERIMENTS.md §Perf)
+            mb = jax.tree.map(
+                lambda a: a.reshape(k, a.shape[0] // k, *a.shape[1:]), batch)
+            mspecs = sspecs["opt"]["m"]
+
+            def pin(t):
+                return jax.tree.map(
+                    lambda a, sp: jax.lax.with_sharding_constraint(a, sp),
+                    t, mspecs,
+                    is_leaf=lambda x: not isinstance(x, dict))
+
+            gz = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  state["params"]))
+
+            def acc(carry, mbi):
+                g_acc, l_acc = carry
+                (l, _m), g = grad_fn(state["params"], mbi)
+                g_acc = pin(jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g))
+                return (g_acc, l_acc + l), None
+
+            (grads, lsum), _ = jax.lax.scan(acc, (gz, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = lsum / k
+            metrics = {"ce": loss, "aux": jnp.float32(0.0)}
+        new_params, new_opt, om = adamw_update(
+            grads, state["opt"], state["params"], tc.opt)
+        metrics = dict(metrics, loss=loss, **om)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    in_sh = (specs_lib.named(mesh, sspecs), specs_lib.named(mesh, bspecs))
+    out_sh = (specs_lib.named(mesh, sspecs), None)
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0,) if donate else ()), sspecs, bspecs, ctx
+
+
+def make_prefill(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                 q_chunk: int = 1024, fsdp: Optional[bool] = None):
+    axes = axes_from_mesh(mesh)
+    if fsdp is None:
+        fsdp = specs_lib.auto_fsdp_serving(cfg, mesh, axes)
+    sb = specs_lib.build(cfg, mesh, axes, fsdp)
+    pspecs = sb.param_specs()
+    bspecs = batch_specs(cfg, shape, mesh, axes)
+    cspecs = sb.cache_specs(shape)
+    bsharded = bspecs["tokens"][0] is not None
+    ctx = _ctx(cfg, mesh, axes, batch_sharded=bsharded, fsdp=fsdp,
+               q_chunk=q_chunk, window=0)
+
+    def pf(params, batch):
+        return tf.prefill(params, cfg, batch["tokens"], ctx,
+                          frontend=batch.get("frontend"))
+
+    in_sh = (specs_lib.named(mesh, pspecs), specs_lib.named(mesh, bspecs))
+    out_sh = (None, specs_lib.named(mesh, cspecs))
+    return jax.jit(pf, in_shardings=in_sh, out_shardings=out_sh), \
+        pspecs, bspecs, cspecs, ctx
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                    fsdp: Optional[bool] = None, donate: bool = True):
+    """ONE-token decode step against a seq_len cache (decode shapes)."""
+    axes = axes_from_mesh(mesh)
+    if fsdp is None:
+        fsdp = specs_lib.auto_fsdp_serving(cfg, mesh, axes)
+    sb = specs_lib.build(cfg, mesh, axes, fsdp)
+    pspecs = sb.param_specs()
+    cspecs = sb.cache_specs(shape)
+    bax = sb.batch_spec(shape.global_batch)
+    bsharded = bax is not None
+    ctx = _ctx(cfg, mesh, axes, batch_sharded=bsharded, fsdp=fsdp,
+               q_chunk=1, window=0)
+
+    def step(params, token, cache, pos):
+        return tf.decode_step(params, cfg, token, cache, pos, ctx)
+
+    in_sh = (specs_lib.named(mesh, pspecs),
+             NamedSharding(mesh, P(bax, None)),
+             specs_lib.named(mesh, cspecs),
+             NamedSharding(mesh, P()))
+    out_sh = (None, specs_lib.named(mesh, cspecs))
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(2,) if donate else ()), \
+        pspecs, cspecs, ctx

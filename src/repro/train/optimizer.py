@@ -1,0 +1,85 @@
+"""AdamW in pure JAX, with configurable moment dtype.
+
+Moments default to fp32; for the largest archs (jamba-398B) bf16 moments are
+required to fit 256 chips (EXPERIMENTS.md §Dry-run quantifies this: fp32
+Adam states need 21.8 GB/chip at 256-way full sharding, over the v5e 16 GB;
+bf16 moments bring it to 8.7 GB).  Optimizer state shards exactly like the
+parameters (ZeRO).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"       # float32 | bfloat16
+
+
+def lr_at(oc: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = oc.lr * step / max(oc.warmup_steps, 1)
+    t = jnp.clip((step - oc.warmup_steps) /
+                 max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * oc.lr * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def adamw_init(params, oc: OptConfig):
+    mdt = jnp.dtype(oc.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt, params, oc: OptConfig):
+    """Returns (new_params, new_opt, metrics)."""
+    step = opt["step"] + 1
+    lr = lr_at(oc, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if oc.grad_clip else 1.0
+    mdt = jnp.dtype(oc.moment_dtype)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - oc.b1 ** t
+    bc2 = 1.0 - oc.b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * oc.b1 + (1 - oc.b1) * g
+        v32 = v.astype(jnp.float32) * oc.b2 + (1 - oc.b2) * g * g
+        u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + oc.eps)
+        wd = oc.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (u + wd)
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt["m"])
+    flat_v = treedef.flatten_up_to(opt["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,23 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+# tests run on the real 1-device CPU platform (the 512-device override is
+# ONLY for launch/dryrun.py as a process entrypoint)
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def sleep_dataset():
+    """Small shared dataset for classifier tests."""
+    from repro.data.pipeline import make_dataset
+    return make_dataset(6000, 1500, chunk=3000, use_kernel=False, seed=3)

@@ -1,0 +1,107 @@
+"""Classifier correctness: separable-data sanity + sleep-data accuracy bands
++ single-vs-distributed equivalence (the paper's central claim: more machines,
+same model)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, PCA, SVD, metrics
+from repro.core.estimator import DistContext
+from repro.sharding.axes import make_test_mesh
+
+
+def _blobs(key, n=1200, f=10, k=3, sep=4.0):
+    ks = jax.random.split(key, 2)
+    y = jax.random.randint(ks[0], (n,), 0, k)
+    centers = sep * jax.random.normal(jax.random.PRNGKey(7), (k, f))
+    X = centers[y] + jax.random.normal(ks[1], (n, f))
+    return X, y
+
+
+@pytest.mark.parametrize("name", ["nb", "lr", "svm", "dt", "rf", "gbt", "ada"])
+def test_separable_blobs(rng, name):
+    X, y = _blobs(rng)
+    algo = ALGORITHMS[name](n_classes=3)
+    params = algo.fit(X, y, DistContext(), key=rng)
+    acc = metrics.evaluate(y, algo.predict(params, X), 3)["accuracy"]
+    assert acc > 0.9, f"{name}: {acc}"
+
+
+@pytest.mark.parametrize("name,floor", [
+    ("nb", 0.45), ("lr", 0.75), ("dt", 0.70), ("rf", 0.72),
+    ("gbt", 0.75), ("svm", 0.72), ("ada", 0.55),
+])
+def test_sleep_accuracy_band(sleep_dataset, rng, name, floor):
+    """Paper-regime accuracy on the synthetic sleep task (ceiling ~0.84
+    from label noise)."""
+    ds = sleep_dataset
+    algo = ALGORITHMS[name](n_classes=6)
+    params = algo.fit(ds["X_train"], ds["y_train"], DistContext(), key=rng)
+    rep = metrics.evaluate(ds["y_test"], algo.predict(params, ds["X_test"]), 6)
+    assert floor < rep["accuracy"] <= 0.92, (name, rep["accuracy"])
+
+
+@pytest.mark.parametrize("name", ["nb", "dt", "gbt"])
+def test_single_vs_distributed_equivalence(sleep_dataset, name):
+    """2 virtual shards on 1 device: sufficient-stats algorithms must give
+    bitwise-comparable models to the single-machine run (paper Tables 2-6
+    show identical A/P/R across cluster sizes)."""
+    ds = sleep_dataset
+    n = (ds["X_train"].shape[0] // 2) * 2
+    X, y = ds["X_train"][:n], ds["y_train"][:n]
+    single = ALGORITHMS[name](n_classes=6)
+    p1 = single.fit(X, y, DistContext(), key=jax.random.PRNGKey(5))
+
+    mesh = make_test_mesh(1, 1)  # 1-device mesh exercising the shard_map path
+    ctx = DistContext(mesh=mesh)
+    p2 = single.fit(X, y, ctx, key=jax.random.PRNGKey(5))
+    pred1 = single.predict(p1, ds["X_test"])
+    pred2 = single.predict(p2, ds["X_test"])
+    agree = float((pred1 == pred2).mean())
+    assert agree > 0.995, agree
+
+
+def test_gbt_mllib2018_pathology(sleep_dataset):
+    """The paper's GBT accuracy (0.214) came from running a binary-only GBT
+    on 6 classes; our faithful mode must reproduce the collapse."""
+    ds = sleep_dataset
+    algo = ALGORITHMS["gbt"](n_classes=6)
+    algo.mode = "mllib2018"
+    p = algo.fit(ds["X_train"], ds["y_train"], DistContext())
+    pred = algo.predict(p, ds["X_test"])
+    assert int(jnp.unique(pred).size) <= 2          # only two classes ever
+    acc = metrics.evaluate(ds["y_test"], pred, 6)["accuracy"]
+    fixed = ALGORITHMS["gbt"](n_classes=6)
+    pf = fixed.fit(ds["X_train"], ds["y_train"], DistContext())
+    accf = metrics.evaluate(ds["y_test"], fixed.predict(pf, ds["X_test"]),
+                            6)["accuracy"]
+    assert acc < 0.5 < accf
+
+
+def test_pca_reconstruction(rng):
+    X = jax.random.normal(rng, (2000, 20)) @ jax.random.normal(
+        jax.random.PRNGKey(1), (20, 40))
+    pca = PCA(20)
+    p, Xt = pca.fit_transform(X)
+    assert Xt.shape == (2000, 20)
+    # 20 latent dims -> 20 components capture everything
+    tot = jnp.var(X - X.mean(0), axis=0).sum()
+    assert float(p["explained"].sum()) / float(tot) > 0.99
+
+
+def test_svd_matches_dense_svd(rng):
+    X = jax.random.normal(rng, (1024, 30))
+    svd = SVD(5, power_iters=4)
+    p = svd.fit(X)
+    _, s_np, _ = np.linalg.svd(np.asarray(X), full_matrices=False)
+    np.testing.assert_allclose(p["singular_values"], s_np[:5], rtol=2e-2)
+
+
+def test_metrics_confusion(rng):
+    y = jnp.array([0, 0, 1, 1, 2, 2])
+    pred = jnp.array([0, 1, 1, 1, 2, 0])
+    cm = metrics.confusion_matrix(y, pred, 3)
+    np.testing.assert_allclose(cm, [[1, 1, 0], [0, 2, 0], [1, 0, 1]])
+    rep = metrics.classification_report(cm)
+    np.testing.assert_allclose(rep["accuracy"], 4 / 6, rtol=1e-6)

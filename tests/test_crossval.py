@@ -1,0 +1,40 @@
+"""Cross-validation / model-selection utilities."""
+import numpy as np
+
+from repro.core.crossval import cross_validate, grid_search, kfold_indices
+from repro.core.logistic_regression import LogisticRegression
+from repro.core.naive_bayes import NaiveBayes
+
+
+def test_kfold_partition():
+    folds = list(kfold_indices(100, 5, seed=1))
+    assert len(folds) == 5
+    all_test = np.concatenate([te for _tr, te in folds])
+    assert sorted(all_test.tolist()) == list(range(100))
+    for tr, te in folds:
+        assert set(tr).isdisjoint(set(te))
+        assert len(tr) + len(te) == 100
+
+
+def test_cross_validate_blobs(rng=None):
+    import jax
+    key = jax.random.PRNGKey(0)
+    import jax.numpy as jnp
+    y = jax.random.randint(key, (600,), 0, 3)
+    centers = 5.0 * jax.random.normal(jax.random.PRNGKey(1), (3, 8))
+    X = centers[y] + jax.random.normal(jax.random.PRNGKey(2), (600, 8))
+    res = cross_validate(lambda: NaiveBayes(3), X, y, n_classes=3, k=4)
+    assert res["acc_mean"] > 0.9
+    assert res["folds"] == 4
+
+
+def test_grid_search_picks_reasonable():
+    import jax
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(0)
+    y = jax.random.randint(key, (400,), 0, 2)
+    centers = 3.0 * jax.random.normal(jax.random.PRNGKey(1), (2, 6))
+    X = centers[y] + jax.random.normal(jax.random.PRNGKey(2), (400, 6))
+    out = grid_search(LogisticRegression, {"iters": [5, 60]}, X, y,
+                      n_classes=2, k=3)
+    assert out["best"]["acc_mean"] >= max(r["acc_mean"] for r in out["all"]) - 1e-9

@@ -1,0 +1,86 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,t", [(8, 3000), (16, 1000), (24, 257), (8, 128)])
+def test_band_stats_matches_ref(rng, n, t):
+    x = jax.random.normal(rng, (n, 5, t)) * 40 + 3
+    xs = jnp.sort(x, axis=-1)
+    got = ops.band_stats(xs, force="interpret")
+    want = ref.band_stats_ref(xs)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_band_stats_dtypes(rng, dtype):
+    x = jnp.sort(jax.random.normal(rng, (8, 5, 512)).astype(dtype), -1)
+    got = ops.band_stats(x.astype(jnp.float32), force="interpret")
+    assert got.shape == (8, 5, 15)
+    assert not bool(jnp.isnan(got).any())
+
+
+@pytest.mark.parametrize("n,f", [(512, 75), (1024, 128), (600, 33), (2048, 256)])
+def test_gram_matches_ref(rng, n, f):
+    X = jax.random.normal(rng, (n, f))
+    got = ops.gram(X, force="interpret")
+    want = ref.gram_ref(X)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+
+def test_gram_symmetric(rng):
+    X = jax.random.normal(rng, (512, 75))
+    g = ops.gram(X, force="interpret")
+    np.testing.assert_allclose(g, g.T, rtol=1e-6, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,s,b,c", [(2048, 8, 32, 6), (512, 32, 16, 3),
+                                     (1000, 4, 8, 1)])
+def test_hist_matches_ref(rng, n, s, b, c):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    bins = jax.random.randint(k1, (n,), 0, b)
+    node = jax.random.randint(k2, (n,), 0, s)
+    stat = jax.random.normal(k3, (n, c))
+    got = ops.hist(bins, node, stat, s, b, force="interpret")
+    want = ref.hist_ref(bins, node, stat, s, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_hist_total_mass(rng):
+    bins = jax.random.randint(rng, (2048,), 0, 32)
+    node = jax.random.randint(rng, (2048,), 0, 8)
+    stat = jnp.ones((2048, 2))
+    got = ops.hist(bins, node, stat, 8, 32, force="interpret")
+    np.testing.assert_allclose(got.sum(), 2048 * 2, rtol=1e-6)
+
+
+@pytest.mark.parametrize("s,d,h,window", [
+    (256, 64, 4, 0), (256, 64, 4, 64), (384, 128, 2, 128), (128, 32, 8, 32),
+])
+def test_swa_matches_ref(rng, s, d, h, window):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, s, h, d)) * 0.3
+    k = jax.random.normal(ks[1], (2, s, h, d)) * 0.3
+    v = jax.random.normal(ks[2], (2, s, h, d))
+    got = ops.swa_attention(q, k, v, window=window, force="interpret")
+    want = ref.swa_attention_ref(q, k, v, window)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_swa_bf16(rng):
+    q = (jax.random.normal(rng, (1, 128, 2, 128)) * 0.3).astype(jnp.bfloat16)
+    got = ops.swa_attention(q, q, q, window=64, force="interpret")
+    want = ref.swa_attention_ref(q, q, q, 64)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_swa_window_equals_full_when_large(rng):
+    q = jax.random.normal(rng, (1, 128, 2, 64)) * 0.3
+    a = ops.swa_attention(q, q, q, window=0, force="interpret")
+    b = ops.swa_attention(q, q, q, window=4096, force="interpret")
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,148 @@
+"""Semantic invariants of the model zoo:
+
+* decode path == full forward (teacher-forced next-token logits) for every
+  block family — validates the KV cache, circular SWA buffer, and the
+  recurrent state updates against the parallel (chunked) forms;
+* chunked attention == single-chunk attention;
+* mLSTM chunked-parallel == step-by-step recurrence;
+* Mamba chunked scan == step-by-step recurrence.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import Context, decode_step, forward, prefill, unembed
+from repro.models import ssm as ssm_lib
+from repro.models.attention import attention
+from repro.sharding.axes import SINGLE_POD, make_test_mesh
+
+B, S = 2, 32
+
+
+@pytest.mark.parametrize("arch", [
+    "stablelm-1.6b",            # dense, layernorm, MHA
+    "llama3.2-3b",              # GQA + head padding + tied embeddings
+    "codeqwen1.5-7b",           # dense, high rope theta
+    "internlm2-20b",            # dense GQA
+    "qwen2-moe-a2.7b",          # MoE + shared experts
+    "qwen3-moe-235b-a22b",      # 128-expert top-8 MoE
+    "xlstm-1.3b",               # mLSTM + sLSTM
+    "jamba-1.5-large-398b",     # mamba + attn + MoE hybrid
+    "whisper-medium",           # enc-dec + cross-attn + learned pos
+    "llava-next-mistral-7b",    # VLM prefix tokens
+])
+def test_decode_matches_forward(arch, rng):
+    """prefill(S-1 tokens) + decode(token S-1) == forward(S tokens) last logits."""
+    cfg = get_smoke_config(arch)
+    if cfg.n_experts:
+        # capacity drops are legitimate train/prefill-vs-decode divergence
+        # (decode never drops); disable them to verify the exact math
+        cfg = cfg.replace(capacity_factor=64.0)
+    mesh = make_test_mesh()
+    from repro.models import init_params
+    params = init_params(rng, cfg)
+    tok_len = S - (cfg.n_patches or 0)
+    tokens = jax.random.randint(rng, (B, tok_len), 0, cfg.vocab_size)
+    frontend = None
+    if cfg.n_patches:
+        frontend = 0.1 * jax.random.normal(rng, (B, cfg.n_patches, cfg.d_model))
+    elif cfg.is_enc_dec:
+        frontend = 0.1 * jax.random.normal(rng, (B, cfg.n_frames, cfg.d_model))
+    ctx = Context(mesh=mesh, axes=SINGLE_POD, batch_sharded=False,
+                  fsdp=False, q_chunk=16)
+    with jax.set_mesh(mesh):
+        h, _, _ = forward(params, cfg, tokens, ctx, frontend=frontend)
+        want = unembed(params, cfg, h[:, -1:])
+
+        logits_pf, cache = prefill(params, cfg, tokens[:, :-1], ctx,
+                                   frontend=frontend)
+        from repro.models.kvcache import grow_cache
+        full_len = tok_len + (cfg.n_patches or 0)
+        cache = grow_cache(cache, cfg, B, full_len)
+        got, _ = decode_step(params, cfg, tokens[:, -1:], cache,
+                             jnp.int32(full_len - 1), ctx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_matches_single(rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 64, 2, 3, 16)) * 0.5
+    k = jax.random.normal(ks[1], (2, 64, 2, 16)) * 0.5
+    v = jax.random.normal(ks[2], (2, 64, 2, 16))
+    a = attention(q, k, v, causal=True, q_chunk=64)
+    b = attention(q, k, v, causal=True, q_chunk=16)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_attention_window(rng):
+    q = jax.random.normal(rng, (1, 64, 1, 2, 16)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 64, 1, 16)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (1, 64, 1, 16))
+    a = attention(q, k, v, causal=True, window=16, q_chunk=64)
+    b = attention(q, k, v, causal=True, window=16, q_chunk=8)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def _mini_cfg(kind):
+    base = get_smoke_config("xlstm-1.3b" if kind != "mamba"
+                            else "jamba-1.5-large-398b")
+    return base
+
+
+def test_mlstm_chunked_equals_recurrent(rng):
+    cfg = _mini_cfg("mlstm").replace(d_model=64, n_heads=2)
+    p = ssm_lib.init_mlstm(rng, cfg, cfg.d_model)
+    x = 0.5 * jax.random.normal(rng, (2, 24, cfg.d_model))
+    y_par, _ = ssm_lib.mlstm_block(x, p, cfg, chunk=8)
+    # step-by-step decode
+    di = cfg.ssm_expand * cfg.d_model
+    nh = cfg.n_heads
+    hd = di // nh
+    st = (jnp.zeros((2, nh, hd, hd)), jnp.zeros((2, nh, hd)),
+          jnp.full((2, nh), -1e30), jnp.zeros((2, nh)))
+    outs = []
+    for t in range(24):
+        o, st = ssm_lib.mlstm_decode(x[:, t:t + 1], p, cfg, st)
+        outs.append(o)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_chunked_equals_recurrent(rng):
+    cfg = _mini_cfg("mamba").replace(d_model=48)
+    p = ssm_lib.init_mamba(rng, cfg, cfg.d_model)
+    x = 0.5 * jax.random.normal(rng, (2, 16, cfg.d_model))
+    y_par, _ = ssm_lib.mamba_block(x, p, cfg, chunk=4)
+    state = {"h": jnp.zeros((2, cfg.ssm_expand * cfg.d_model, cfg.ssm_d_state)),
+             "conv": jnp.zeros((2, cfg.ssm_d_conv - 1,
+                                cfg.ssm_expand * cfg.d_model))}
+    outs = []
+    for t in range(16):
+        o, state = ssm_lib.mamba_decode(x[:, t:t + 1], p, cfg, state)
+        outs.append(o)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_swa_train_equals_full_when_window_ge_seq(rng):
+    """window >= S: SWA must equal full attention (the long_500k dense
+    variant degenerates correctly)."""
+    cfg = get_smoke_config("llama3.2-3b")
+    from repro.models import init_params
+    params = init_params(rng, cfg)
+    tokens = jax.random.randint(rng, (1, S), 0, cfg.vocab_size)
+    mesh = make_test_mesh()
+    with jax.set_mesh(mesh):
+        c0 = Context(mesh=mesh, axes=SINGLE_POD, batch_sharded=False,
+                     q_chunk=16, window=0)
+        c1 = Context(mesh=mesh, axes=SINGLE_POD, batch_sharded=False,
+                     q_chunk=16, window=S + 5)
+        h0, _, _ = forward(params, cfg, tokens, c0)
+        h1, _, _ = forward(params, cfg, tokens, c1)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,111 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics
+from repro.core.naive_bayes import NaiveBayes
+from repro.core.trees import binarize, fit_bins
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(16, 200), st.integers(2, 6), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_confusion_matrix_mass_conservation(n, k, seed):
+    key = jax.random.PRNGKey(seed)
+    y = jax.random.randint(key, (n,), 0, k)
+    p = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, k)
+    cm = metrics.confusion_matrix(y, p, k)
+    assert float(cm.sum()) == n
+    rep = metrics.classification_report(cm)
+    assert 0.0 <= rep["accuracy"] <= 1.0
+    assert 0.0 <= rep["precision"] <= 1.0
+    assert 0.0 <= rep["recall"] <= 1.0
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_perfect_prediction_metrics(seed):
+    key = jax.random.PRNGKey(seed)
+    y = jax.random.randint(key, (64,), 0, 4)
+    rep = metrics.evaluate(y, y, 4)
+    assert rep["accuracy"] == 1.0 and rep["recall"] == 1.0
+
+
+@given(st.integers(32, 256), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_band_stats_order_invariants(t, seed):
+    """On sorted data: min <= q25 <= median <= q75 <= max; iqr >= 0;
+    std >= 0; energy >= 0; entropy >= 0."""
+    key = jax.random.PRNGKey(seed)
+    x = jnp.sort(jax.random.normal(key, (4, 5, t)) * 10, -1)
+    s = ref.band_stats_ref(x)
+    mn, med, mx = s[..., 5], s[..., 6], s[..., 7]
+    q25, q75, iqr = s[..., 10], s[..., 11], s[..., 12]
+    assert bool(jnp.all(mn <= q25 + 1e-5)) and bool(jnp.all(q25 <= med + 1e-5))
+    assert bool(jnp.all(med <= q75 + 1e-5)) and bool(jnp.all(q75 <= mx + 1e-5))
+    assert bool(jnp.all(iqr >= -1e-6))
+    assert bool(jnp.all(s[..., 8] >= 0))        # std
+    assert bool(jnp.all(s[..., 3] >= 0))        # energy
+    assert bool(jnp.all(s[..., 4] >= -1e-5))    # entropy
+
+
+@given(st.integers(1, 6), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_band_stats_scale_equivariance(scale_pow, seed):
+    """mean/std/quantiles scale linearly; skew/kurtosis are scale-free."""
+    key = jax.random.PRNGKey(seed)
+    x = jnp.sort(jax.random.normal(key, (2, 5, 100)), -1)
+    c = float(2 ** scale_pow)
+    a = ref.band_stats_ref(x)
+    b = ref.band_stats_ref(x * c)
+    for idx in (0, 6, 8, 10, 11, 12):           # mean, median, std, q25, q75, iqr
+        np.testing.assert_allclose(b[..., idx], a[..., idx] * c,
+                                   rtol=1e-4, atol=1e-4)
+    for idx in (9, 14):                          # skew, kurtosis scale-free
+        np.testing.assert_allclose(b[..., idx], a[..., idx],
+                                   rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(2, 16), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_binarize_monotonic(n_bins, seed):
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.normal(key, (128, 3))
+    edges = fit_bins(X, n_bins)
+    Xb = binarize(X, edges)
+    assert int(Xb.max()) <= n_bins - 1 and int(Xb.min()) >= 0
+    # monotonic: larger value -> bin index at least as large (per column)
+    order = jnp.argsort(X[:, 0])
+    assert bool(jnp.all(jnp.diff(Xb[order, 0].astype(jnp.int32)) >= 0))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_nb_invariant_to_example_order(seed):
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.normal(key, (128, 8))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (128,), 0, 3)
+    perm = jax.random.permutation(jax.random.fold_in(key, 2), 128)
+    nb = NaiveBayes(3)
+    p1 = nb.fit(X, y)
+    p2 = nb.fit(X[perm], y[perm])
+    np.testing.assert_allclose(p1["mean"], p2["mean"], rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 8), st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_hist_shard_additivity(shards, seed):
+    """The treeAggregate contract: hist(full) == sum of hist(shards)."""
+    key = jax.random.PRNGKey(seed)
+    n = 64 * shards
+    bins = jax.random.randint(key, (n,), 0, 8)
+    node = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 4)
+    stat = jax.random.normal(jax.random.fold_in(key, 2), (n, 2))
+    full = ref.hist_ref(bins, node, stat, 4, 8)
+    parts = sum(ref.hist_ref(bins[i::shards], node[i::shards],
+                             stat[i::shards], 4, 8) for i in range(shards))
+    np.testing.assert_allclose(full, parts, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,59 @@
+"""int8 KV cache: quantization round-trip + decode-path accuracy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import Context, decode_step, init_params, prefill
+from repro.models.attention import dequantize_kv, quantize_kv
+from repro.models.kvcache import cache_layout, grow_cache
+from repro.sharding.axes import SINGLE_POD, make_test_mesh
+
+
+def test_quantize_roundtrip(rng):
+    x = jax.random.normal(rng, (2, 16, 4, 64)) * 3.0
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (2, 16, 4, 1)
+    xd = dequantize_kv(q, s, jnp.float32)
+    err = jnp.abs(xd - x).max() / jnp.abs(x).max()
+    assert float(err) < 0.02
+
+
+def test_quantize_scale_invariance(rng):
+    """Quantization error is relative: scaling x scales the output."""
+    x = jax.random.normal(rng, (1, 8, 2, 32))
+    q1, s1 = quantize_kv(x)
+    q2, s2 = quantize_kv(x * 100.0)
+    np.testing.assert_array_equal(q1, q2)
+    np.testing.assert_allclose(np.asarray(s2, np.float32),
+                               np.asarray(s1, np.float32) * 100.0, rtol=1e-2)
+
+
+def test_int8_cache_layout():
+    cfg = get_smoke_config("llama3.2-3b").replace(kv_dtype="int8")
+    lay = cache_layout(cfg, 2, 64)
+    sub = lay["pos0"]
+    assert sub["k"][1] == jnp.int8
+    assert "k_scale" in sub and "v_scale" in sub
+
+
+def test_int8_decode_close_to_bf16(rng):
+    base = get_smoke_config("llama3.2-3b")
+    mesh = make_test_mesh()
+    S = 32
+    tokens = jax.random.randint(rng, (2, S), 0, base.vocab_size)
+    outs = {}
+    with jax.set_mesh(mesh):
+        for name, cfg in (("ref", base), ("int8", base.replace(kv_dtype="int8"))):
+            params = init_params(rng, cfg)
+            ctx = Context(mesh=mesh, axes=SINGLE_POD, batch_sharded=False,
+                          q_chunk=16)
+            _lg, cache = prefill(params, cfg, tokens[:, :-1], ctx)
+            cache = grow_cache(cache, cfg, 2, S)
+            got, _ = decode_step(params, cfg, tokens[:, -1:], cache,
+                                 jnp.int32(S - 1), ctx)
+            outs[name] = np.asarray(got)
+    err = np.abs(outs["ref"] - outs["int8"]).max() / \
+        (np.abs(outs["ref"]).max() + 1e-9)
+    assert err < 0.05, err

@@ -1,0 +1,178 @@
+"""Substrate tests: optimizer, checkpoint roundtrip, data pipeline, specs,
+HLO parser, configs."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES, SHAPES_BY_NAME
+from repro.launch.hloparse import loop_multipliers, shape_bytes
+from repro.sharding import specs as specs_lib
+from repro.sharding.axes import SINGLE_POD, make_test_mesh
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update, lr_at
+
+
+def test_configs_match_assignment():
+    spec = {
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, h, kv, ff, v), arch
+
+
+def test_param_counts_sane():
+    assert abs(get_config("jamba-1.5-large-398b").param_count() - 398e9) < 20e9
+    assert abs(get_config("qwen3-moe-235b-a22b").param_count() - 235e9) < 12e9
+    a = get_config("qwen3-moe-235b-a22b")
+    assert abs(a.active_param_count() - 22e9) < 3e9
+    assert abs(get_config("qwen2-moe-a2.7b").active_param_count() - 2.7e9) < 1e9
+
+
+def test_moe_experts_divide_production_tp():
+    from repro.models.moe import padded_experts
+    for arch in ARCH_IDS:
+        c = get_config(arch)
+        if c.n_experts:
+            assert padded_experts(c.n_experts) % 16 == 0, arch
+
+
+def test_lr_schedule():
+    oc = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr_at(oc, jnp.asarray(0))) == 0.0
+    assert abs(float(lr_at(oc, jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(lr_at(oc, jnp.asarray(100))) < 1e-8
+
+
+def test_adamw_reduces_quadratic():
+    oc = OptConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(params, oc)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(grads, opt, params, oc)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    state = {"params": {"a": jax.random.normal(rng, (4, 8)),
+                        "nested": {"b": jnp.arange(5, dtype=jnp.int32)}},
+             "opt": {"step": jnp.int32(7)}}
+    ckpt.save(str(tmp_path / "c"), state, step=7)
+    struct = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    got = ckpt.restore(str(tmp_path / "c"), struct)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        np.testing.assert_allclose(a, b)
+
+
+def test_checkpoint_latest_step(tmp_path):
+    for s in (10, 20, 5):
+        os.makedirs(tmp_path / f"step_{s}")
+    assert ckpt.latest_step(str(tmp_path)) == 20
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "qwen3-moe-235b-a22b",
+                                  "jamba-1.5-large-398b", "xlstm-1.3b",
+                                  "whisper-medium"])
+def test_param_specs_cover_tree(arch, rng):
+    """Spec tree must structurally match the param tree (every leaf gets a
+    PartitionSpec of matching rank)."""
+    cfg = get_smoke_config(arch)
+    mesh = make_test_mesh()
+    from repro.models import init_params
+    params = init_params(rng, cfg)
+    specs = specs_lib.build(cfg, mesh, SINGLE_POD, fsdp=True).param_specs()
+    pl = jax.tree_util.tree_flatten_with_path(params)[0]
+    sl = dict(jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: type(x).__name__ == "PartitionSpec")[0])
+    assert len(pl) == len(sl)
+    for path, leaf in pl:
+        spec = sl[path]
+        assert len(tuple(spec)) <= leaf.ndim, (path, spec, leaf.shape)
+
+
+def test_cache_specs_cover_layout():
+    from repro.models.kvcache import cache_layout
+    for arch in ("llama3.2-3b", "jamba-1.5-large-398b", "xlstm-1.3b",
+                 "whisper-medium"):
+        cfg = get_config(arch)
+        for sh in ("decode_32k", "long_500k"):
+            shape = SHAPES_BY_NAME[sh]
+            mesh = make_test_mesh()
+            cs = specs_lib.build(cfg, mesh, SINGLE_POD, False).cache_specs(shape)
+            lay = cache_layout(cfg, shape.global_batch, shape.seq_len)
+            assert set(cs) == set(lay)
+            for pj in lay:
+                assert set(cs[pj]) == set(lay[pj]), (arch, sh, pj)
+
+
+def test_hlo_shape_bytes():
+    assert shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert shape_bytes("(f32[4,4]{1,0}, s32[2]{0})") == 64 + 8
+    assert shape_bytes("pred[10]{0}") == 10
+
+
+def test_loop_multipliers_nested():
+    hlo = """
+ENTRY %main.1 (p0: f32[2]) -> f32[2] {
+  %w1 = (s32[], f32[2]) while(%t), condition=%cond1, body=%body1, backend_config={"known_trip_count":{"n":"5"}}
+}
+%body1 (p: (s32[], f32[2])) -> (s32[], f32[2]) {
+  %w2 = (s32[], f32[2]) while(%t2), condition=%cond2, body=%body2, backend_config={"known_trip_count":{"n":"3"}}
+}
+%body2 (p: (s32[], f32[2])) -> (s32[], f32[2]) {
+  %x = f32[2] add(%a, %b)
+}
+"""
+    m = loop_multipliers(hlo)
+    assert m.get("body1") == 5
+    assert m.get("body2") == 15
+
+
+def test_token_stream_deterministic():
+    from repro.data.pipeline import token_stream
+    cfg = get_smoke_config("llama3.2-3b")
+    a = next(token_stream(cfg, 2, 16, seed=1))
+    b = next(token_stream(cfg, 2, 16, seed=1))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_features_shape_and_finite():
+    from repro.data.features import extract_features
+    from repro.data.synthetic_eeg import synth_epochs
+    X, y = synth_epochs(jax.random.PRNGKey(0), 32)
+    F = extract_features(X, use_kernel=False)
+    assert F.shape == (32, 75)
+    assert bool(jnp.isfinite(F).all())
+    assert set(np.asarray(jnp.unique(y)).tolist()) <= set(range(6))
+
+
+def test_stage_spectra_distinguishable():
+    """Delta power must dominate for S4, beta/alpha for W — the Table-1
+    conditioning is actually in the signal."""
+    from repro.data.features import band_split
+    from repro.data.synthetic_eeg import synth_epochs
+    key = jax.random.PRNGKey(1)
+    X, y = synth_epochs(key, 512)
+    bands = band_split(X)                       # (n,5,T)
+    power = (bands ** 2).mean(-1)
+    w_mask = y == 0
+    s4_mask = y == 4
+    if bool(w_mask.any()) and bool(s4_mask.any()):
+        delta_ratio_s4 = float(power[s4_mask, 0].mean() / power[s4_mask].sum(-1).mean())
+        delta_ratio_w = float(power[w_mask, 0].mean() / power[w_mask].sum(-1).mean())
+        assert delta_ratio_s4 > delta_ratio_w
